@@ -1,0 +1,56 @@
+//! Distributed-training demo: ZeRO-1 DDP over worker threads with
+//! measured collective traffic, equivalence check against the
+//! single-worker path, and the distributed-optimizer memory ledger
+//! (paper §2.2.3).
+//!
+//!   cargo run --release --example distributed_training -- [--dp 4] [--steps 4]
+
+use std::sync::Arc;
+
+use linear_moe::coordinator::ddp::{run_ddp, run_single, BatchFn, DdpConfig};
+use linear_moe::coordinator::metrics::Table;
+use linear_moe::data;
+use linear_moe::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |k: &str, d: usize| -> usize {
+        args.iter().position(|a| a == k)
+            .and_then(|i| args.get(i + 1)).and_then(|s| s.parse().ok())
+            .unwrap_or(d)
+    };
+    let dp = get("--dp", 4);
+    let steps = get("--steps", 4);
+    let tag = "tiny_gla";
+    let rt = Runtime::new("artifacts")?;
+    let var = rt.manifest.variant(tag)?.clone();
+    drop(rt);
+    let vocab = var.config.vocab;
+    let bf: BatchFn = Arc::new(move |idx, n| {
+        let mut lm = data::ZipfLm::new(vocab, idx as u64);
+        let b = data::batch_from_stream(&mut lm, 2, n);
+        (b.tokens, b.targets)
+    });
+
+    println!("ZeRO-1 DDP: {dp} workers x (2,128) micro-batches, {steps} steps");
+    let rep = run_ddp(&DdpConfig {
+        artifacts_dir: "artifacts".into(), tag: tag.into(), batch: 2,
+        seq: 128, dp, lr: 1e-3, steps, seed: 0,
+    }, bf.clone())?;
+    let single = run_single("artifacts", tag, 2, 128, 1e-3, steps, bf, dp)?;
+
+    let mut t = Table::new(&["step", "DDP loss", "single+accum loss", "|diff|"]);
+    for i in 0..steps {
+        t.row(&[i.to_string(), format!("{:.5}", rep.losses[i]),
+                format!("{:.5}", single.losses[i]),
+                format!("{:.1e}", (rep.losses[i] - single.losses[i]).abs())]);
+    }
+    t.print();
+    let params = var.params_total;
+    println!("\ncollective traffic: all-gather {} MiB, reduce-scatter {} MiB",
+             rep.traffic.0 / 1048576, rep.traffic.1 / 1048576);
+    println!("optimizer state per rank: {} KiB (ZeRO-1: 2 x {params} / {dp} elems)",
+             2 * params.div_ceil(dp) * 4 / 1024);
+    println!("distributed_training OK");
+    Ok(())
+}

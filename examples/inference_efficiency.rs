@@ -1,0 +1,66 @@
+//! Paper Fig. 5 driver (example form): decode-latency and memory series
+//! for Linear-MoE (Basic LA) vs the FlashAttention-2-role Baseline.
+//! See also benches/fig5_inference.rs; this example prints the full series
+//! and writes a CSV for plotting.
+//!
+//!   cargo run --release --example inference_efficiency -- [--max-len 4096]
+
+use linear_moe::coordinator::metrics::Table;
+use linear_moe::inference::{greedy, AttnDecoder, LsmDecoder};
+use linear_moe::memcost;
+use linear_moe::runtime::Runtime;
+use linear_moe::tensor::Tensor;
+use std::fmt::Write as _;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let max_len: usize = args.iter().position(|a| a == "--max-len")
+        .and_then(|i| args.get(i + 1)).and_then(|s| s.parse().ok())
+        .unwrap_or(4096);
+    let sizes: Vec<usize> = [128usize, 256, 512, 1024, 2048, 4096]
+        .into_iter().filter(|&n| n <= max_len).collect();
+    let rt = Runtime::new("artifacts")?;
+    let batch = 4;
+    let mut lsm = LsmDecoder::new(&rt, "tiny_bla", batch)?;
+    let mut attn = AttnDecoder::new(&rt, "tiny_attn", batch, &sizes)?;
+    let lsm_cfg = lsm.var.config.clone();
+    let attn_cfg = attn.var.config.clone();
+
+    let mut table = Table::new(&["len", "BLA total s", "BLA ms/tok",
+                                 "state KiB", "Attn total s", "Attn ms/tok", "KV KiB"]);
+    let mut csv = String::from("len,bla_ms_tok,bla_kib,attn_ms_tok,attn_kib\n");
+    let mut tok_l = Tensor::i32(&[batch], vec![1; batch]);
+    let mut tok_a = tok_l.clone();
+    let (mut tl, mut ta) = (0.0f64, 0.0f64);
+    let mut pos = 0usize;
+    for &end in &sizes {
+        let t0 = std::time::Instant::now();
+        for p in pos..end {
+            tok_l = greedy(&lsm.step(&tok_l, p as i32)?)?;
+        }
+        let dl = t0.elapsed().as_secs_f64();
+        tl += dl;
+        let t1 = std::time::Instant::now();
+        for p in pos..end {
+            tok_a = greedy(&attn.step(&tok_a, p as i32)?)?;
+        }
+        let da = t1.elapsed().as_secs_f64();
+        ta += da;
+        let seg = (end - pos) as f64;
+        let bla_kib = memcost::decode_state_bytes(&lsm_cfg, batch, end) as f64 / 1024.0;
+        let kv_kib = memcost::decode_state_bytes(&attn_cfg, batch, end) as f64 / 1024.0;
+        table.row(&[end.to_string(), format!("{tl:.1}"),
+                    format!("{:.2}", dl * 1e3 / seg), format!("{bla_kib:.0}"),
+                    format!("{ta:.1}"), format!("{:.2}", da * 1e3 / seg),
+                    format!("{kv_kib:.0}")]);
+        writeln!(csv, "{end},{:.3},{bla_kib:.0},{:.3},{kv_kib:.0}",
+                 dl * 1e3 / seg, da * 1e3 / seg)?;
+        pos = end;
+    }
+    println!("\n=== Fig 5: inference efficiency (batch {batch}) ===");
+    table.print();
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig5_inference.csv", csv)?;
+    println!("series -> results/fig5_inference.csv");
+    Ok(())
+}

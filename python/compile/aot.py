@@ -1,0 +1,382 @@
+# AOT exporter: lowers every L2 function to HLO *text* + manifest.json.
+#
+# HLO text (NOT .serialize()) is the interchange format: jax >= 0.5 emits
+# HloModuleProtos with 64-bit instruction ids which the xla crate's
+# xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+# reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+#
+# Run via `make artifacts`:  python -m compile.aot --out-dir ../artifacts
+# Python runs ONCE here; the Rust runtime (rust/src/runtime) loads the
+# artifacts and never calls back into Python.
+
+import argparse
+import hashlib
+import json
+import math
+import os
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import PRESETS, ModelConfig, layout as mk_layout
+from . import model as model_mod
+from . import moe as moe_mod
+from . import stages
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def leaf_specs(tree):
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    out = []
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for (path, leaf) in paths:
+        out.append({
+            "path": jax.tree_util.keystr(path),
+            "shape": list(leaf.shape),
+            "dtype": str(leaf.dtype),
+        })
+    return out
+
+
+# ----------------------------- variants ------------------------------------
+
+INSTANCES = ("bla", "retention", "gla", "deltanet", "mamba2", "hgrn2",
+             "rwkv6")
+
+
+def variant_cfg(preset: str, inst: str, arch: str) -> ModelConfig:
+    """arch: pure | hybrid | attn."""
+    base = PRESETS[preset]
+    if arch == "attn":
+        return base.with_(layout="N" * base.n_layers)
+    if arch == "hybrid":
+        return base.with_(lsm=inst, layout=mk_layout(base.n_layers, True))
+    return base.with_(lsm=inst, layout="L" * base.n_layers)
+
+
+def variant_tag(preset, inst, arch):
+    if arch == "attn":
+        return f"{preset}_attn"
+    suffix = "h" if arch == "hybrid" else ""
+    return f"{preset}_{inst}{suffix}"
+
+
+def params_spec(cfg):
+    return jax.eval_shape(partial(model_mod.init_params, cfg), 0)
+
+
+# --------------------------- export registry --------------------------------
+
+
+class Exporter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.entries = []
+        self.variants = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add_variant(self, preset, inst, arch):
+        tag = variant_tag(preset, inst, arch)
+        if tag in self.variants:
+            return tag
+        cfg = variant_cfg(preset, inst, arch)
+        total, act = model_mod.param_count(cfg)
+        self.variants[tag] = {
+            "preset": preset, "instance": inst, "arch": arch,
+            "config": {
+                "vocab": cfg.vocab, "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads, "d_head": cfg.d_head,
+                "n_layers": cfg.n_layers, "layout": cfg.layout,
+                "lsm": cfg.lsm, "chunk": cfg.chunk,
+                "n_experts": cfg.n_experts, "top_k": cfg.top_k,
+                "d_ffn": cfg.d_ffn,
+                "capacity_factor": cfg.capacity_factor,
+            },
+            "params_total": int(total), "params_activated": int(act),
+            "param_specs": leaf_specs(params_spec(cfg)),
+        }
+        return tag
+
+    def export(self, name, fn, args, kind, **meta):
+        """Lower fn(*args) and write <name>.hlo.txt."""
+        t0 = time.time()
+        # keep_unused: jit would otherwise DCE-drop unused parameters from
+        # the HLO signature (e.g. xprev/pos in non-RWKV decode steps) and
+        # the Rust runtime's positional calling convention would break.
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        res_spec = jax.eval_shape(fn, *args)
+        self.entries.append({
+            "name": name, "file": fname, "kind": kind,
+            "args": leaf_specs(args), "results": leaf_specs(res_spec),
+            "meta": meta,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        dt = time.time() - t0
+        print(f"  [{dt:5.1f}s] {name}  ({len(text)//1024} KiB)")
+
+    def write_manifest(self):
+        manifest = {
+            "version": 1,
+            "variants": self.variants,
+            "artifacts": self.entries,
+        }
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"wrote {path}: {len(self.entries)} artifacts, "
+              f"{len(self.variants)} variants")
+
+
+# ------------------------------ export sets ---------------------------------
+
+
+def exp_model(ex: Exporter, preset, inst, arch, batch, seq,
+              kinds=("train_step",)):
+    tag = ex.add_variant(preset, inst, arch)
+    cfg = variant_cfg(preset, inst, arch)
+    pspec = params_spec(cfg)
+    toks = sds((batch, seq), I32)
+
+    if "init" in kinds:
+        ex.export(f"init_{tag}", lambda s: model_mod.init_params(cfg, s),
+                  (sds((), I32),), "init", variant=tag)
+    if "train_step" in kinds:
+        ex.export(
+            f"train_step_{tag}_b{batch}n{seq}",
+            lambda p, m, v, st, lr, t, g: model_mod.train_step(
+                cfg, p, m, v, st, lr, t, g),
+            (pspec, pspec, pspec, sds((), I32), sds((), F32), toks, toks),
+            "train_step", variant=tag, batch=batch, seq=seq)
+    if "fwd_bwd" in kinds:
+        ex.export(
+            f"fwd_bwd_{tag}_b{batch}n{seq}",
+            lambda p, t, g: model_mod.fwd_bwd(cfg, p, t, g),
+            (pspec, toks, toks),
+            "fwd_bwd", variant=tag, batch=batch, seq=seq)
+    if "eval_loss" in kinds:
+        ex.export(
+            f"eval_loss_{tag}_b{batch}n{seq}",
+            lambda p, t, g: stages.eval_loss(cfg, p, t, g),
+            (pspec, toks, toks),
+            "eval_loss", variant=tag, batch=batch, seq=seq)
+
+
+def exp_decode(ex: Exporter, preset, inst, arch, batch, max_n=None):
+    tag = ex.add_variant(preset, inst, arch)
+    cfg = variant_cfg(preset, inst, arch)
+    pspec = params_spec(cfg)
+    st = jax.eval_shape(
+        partial(model_mod.init_decode_state, cfg, batch, max_n), )
+    name = f"decode_{tag}_b{batch}" + (f"_n{max_n}" if max_n else "")
+    ex.export(
+        name,
+        lambda p, s, t, pos: model_mod.decode_step(cfg, p, s, t, pos),
+        (pspec, st, sds((batch,), I32), sds((), I32)),
+        "decode", variant=tag, batch=batch, max_n=max_n or 0)
+
+
+def exp_pipeline(ex: Exporter, preset, inst, mb, seq):
+    """Per-layer pipeline pieces (compose to any depth/PP size in Rust)."""
+    for arch, ch in (("pure", "L"), ("attn", "N")):
+        tag = ex.add_variant(preset, inst, arch)
+        cfg = variant_cfg(preset, inst, arch)
+        lp_spec = params_spec(cfg)["layers"][0]
+        x = sds((mb, seq, cfg.d_model))
+        ex.export(f"block_{ch}_{tag}_mb{mb}n{seq}",
+                  lambda lp, xx: stages.block_fwd(cfg, ch, lp, xx),
+                  (lp_spec, x), "block_fwd", variant=tag, ch=ch,
+                  batch=mb, seq=seq)
+        ex.export(f"block_{ch}_bwd_{tag}_mb{mb}n{seq}",
+                  lambda lp, xx, gy: stages.block_bwd(cfg, ch, lp, xx, gy),
+                  (lp_spec, x, x), "block_bwd", variant=tag, ch=ch,
+                  batch=mb, seq=seq)
+    # embed / head are arch-independent (use the pure variant's cfg)
+    cfg = variant_cfg(preset, inst, "pure")
+    tag = variant_tag(preset, inst, "pure")
+    emb = sds((cfg.vocab, cfg.d_model))
+    toks = sds((mb, seq), I32)
+    x = sds((mb, seq, cfg.d_model))
+    ex.export(f"embed_{tag}_mb{mb}n{seq}",
+              lambda e, t: stages.embed_fwd(e, t), (emb, toks),
+              "embed_fwd", variant=tag, batch=mb, seq=seq)
+    ex.export(f"embed_bwd_{tag}_mb{mb}n{seq}",
+              lambda t, gx: stages.embed_bwd(t, gx, cfg.vocab), (toks, x),
+              "embed_bwd", variant=tag, batch=mb, seq=seq)
+    fn = sds((cfg.d_model,))
+    ex.export(f"head_{tag}_mb{mb}n{seq}",
+              lambda f_, e, xx, t: stages.head_fwd(cfg, f_, e, xx, t),
+              (fn, emb, x, toks), "head_fwd", variant=tag, batch=mb, seq=seq)
+    ex.export(f"head_bwd_{tag}_mb{mb}n{seq}",
+              lambda f_, e, xx, t: stages.head_bwd(cfg, f_, e, xx, t),
+              (fn, emb, x, toks), "head_bwd", variant=tag, batch=mb, seq=seq)
+
+
+def exp_sp(ex: Exporter, b, h, c_local, dk, dv, sp_sizes=(2, 4, 8)):
+    """LASP kernel-level primitives (paper Alg. 1/2) + hybrid attention SP."""
+    q = sds((b, h, c_local, dk))
+    v = sds((b, h, c_local, dv))
+    g_s = sds((b, h, c_local))
+    g_v = sds((b, h, c_local, dk))
+    m = sds((b, h, dk, dv))
+    shapes = {"none": None, "scalar": g_s, "vector": g_v}
+    for kind, gs in shapes.items():
+        if kind == "none":
+            ex.export(f"sp_state_{kind}",
+                      lambda k_, v_: stages.sp_state("none", k_, v_, None),
+                      (q, v), "sp_state", gate_kind=kind,
+                      batch=b, heads=h, chunk=c_local, dk=dk, dv=dv)
+            ex.export(f"sp_output_{kind}",
+                      lambda q_, k_, v_, m_: stages.sp_output(
+                          "none", q_, k_, v_, None, m_),
+                      (q, q, v, m), "sp_output", gate_kind=kind,
+                      batch=b, heads=h, chunk=c_local, dk=dk, dv=dv)
+        else:
+            ex.export(f"sp_state_{kind}",
+                      lambda k_, v_, g_, kk=kind: stages.sp_state(kk, k_, v_, g_),
+                      (q, v, gs), "sp_state", gate_kind=kind,
+                      batch=b, heads=h, chunk=c_local, dk=dk, dv=dv)
+            ex.export(f"sp_output_{kind}",
+                      lambda q_, k_, v_, g_, m_, kk=kind: stages.sp_output(
+                          kk, q_, k_, v_, g_, m_),
+                      (q, q, v, gs, m), "sp_output", gate_kind=kind,
+                      batch=b, heads=h, chunk=c_local, dk=dk, dv=dv)
+    for t in sp_sizes:
+        kf = sds((b, h, c_local * t, dk))
+        vf = sds((b, h, c_local * t, dv))
+        ex.export(f"attn_sp_t{t}",
+                  lambda q_, k_, v_, p0: stages.attn_sp(q_, k_, v_, p0),
+                  (q, kf, vf, sds((), I32)), "attn_sp", sp_size=t,
+                  batch=b, heads=h, chunk=c_local, dk=dk, dv=dv)
+
+
+def exp_moe(ex: Exporter, name, tokens, d, e, f, top_k, cap, tile):
+    cfg = ModelConfig(vocab=64, d_model=d, n_heads=1, d_head=d, n_layers=1,
+                      layout="L", n_experts=e, top_k=top_k, d_ffn=f)
+    ex.export(f"moe_router_{name}",
+              lambda w, x: stages.moe_router(cfg, w, x),
+              (sds((d, e)), sds((tokens, d))), "moe_router",
+              tokens=tokens, d_model=d, n_experts=e, top_k=top_k)
+    ex.export(f"moe_expert_cap_{name}",
+              stages.moe_expert,
+              (sds((d, f)), sds((d, f)), sds((f, d)), sds((cap, d))),
+              "moe_expert", group=cap, d_model=d, d_ffn=f)
+    ex.export(f"moe_expert_tile_{name}",
+              stages.moe_expert,
+              (sds((d, f)), sds((d, f)), sds((f, d)), sds((tile, d))),
+              "moe_expert", group=tile, d_model=d, d_ffn=f)
+    for e_local in sorted({e, e // 2, e // 4, e // 8} - {0}):
+        ex.export(f"moe_grouped_{name}_e{e_local}",
+                  stages.moe_grouped,
+                  (sds((e_local, d, f)), sds((e_local, d, f)),
+                   sds((e_local, f, d)), sds((e_local, cap, d))),
+                  "moe_grouped", n_local=e_local, group=cap, d_model=d,
+                  d_ffn=f)
+
+
+def exp_adam(ex: Exporter, sizes=(65536, 4096)):
+    for n in sizes:
+        s = sds((n,))
+        ex.export(
+            f"adam_bucket_{n}",
+            lambda p, g, m, v, st, lr: model_mod.adam_update(
+                p, g, m, v, st, lr),
+            (s, s, s, s, sds((), I32), sds((), F32)),
+            "adam", bucket=n)
+
+
+# ------------------------------- main ---------------------------------------
+
+TABLE3_SHAPES = ((8, 256), (4, 512), (2, 1024), (1, 2048))
+FIG5_STAIRCASE = (128, 256, 512, 1024, 2048, 4096)
+
+
+def build(ex: Exporter, sets):
+    if "core" in sets:
+        # test-gating set: tiny variants, every instance + attn + one hybrid
+        for inst in INSTANCES:
+            exp_model(ex, "tiny", inst, "pure", 2, 128,
+                      ("init", "train_step", "fwd_bwd", "eval_loss"))
+        exp_model(ex, "tiny", "gla", "attn", 2, 128,
+                  ("init", "train_step", "fwd_bwd", "eval_loss"))
+        exp_model(ex, "tiny", "gla", "hybrid", 2, 128,
+                  ("init", "train_step", "fwd_bwd", "eval_loss"))
+        # monolith twin of the pipeline decomposition (integration test)
+        exp_model(ex, "tiny", "gla", "pure", 1, 128, ("fwd_bwd",))
+    if "table3" in sets:
+        for inst in INSTANCES:
+            for b, n in TABLE3_SHAPES:
+                exp_model(ex, "tiny", inst, "pure", b, n, ("train_step",))
+        for b, n in TABLE3_SHAPES:
+            exp_model(ex, "tiny", "gla", "attn", b, n, ("train_step",))
+    if "decode" in sets:
+        for inst in INSTANCES:
+            exp_decode(ex, "tiny", inst, "pure", 4)
+        for n in FIG5_STAIRCASE:
+            exp_decode(ex, "tiny", "gla", "attn", 4, max_n=n)
+        exp_decode(ex, "tiny", "gla", "hybrid", 4, max_n=FIG5_STAIRCASE[-1])
+    if "pipeline" in sets:
+        exp_pipeline(ex, "tiny", "gla", 1, 128)
+    if "sp" in sets:
+        exp_sp(ex, 1, 2, 256, 64, 64)
+    if "moe" in sets:
+        exp_moe(ex, "tiny", tokens=256, d=128, e=4, f=128, top_k=2,
+                cap=192, tile=32)
+        exp_moe(ex, "bench", tokens=512, d=256, e=8, f=256, top_k=2,
+                cap=192, tile=64)
+    if "adam" in sets:
+        exp_adam(ex)
+    if "small" in sets:
+        for inst in INSTANCES:
+            for arch in ("pure", "hybrid"):
+                exp_model(ex, "small", inst, arch, 4, 256,
+                          ("init", "train_step", "eval_loss"))
+        exp_model(ex, "small", "gla", "attn", 4, 256,
+                  ("init", "train_step", "eval_loss"))
+    if "small-decode" in sets:
+        exp_decode(ex, "small", "bla", "pure", 2)
+        exp_decode(ex, "small", "gla", "pure", 2)
+        for n in FIG5_STAIRCASE:
+            exp_decode(ex, "small", "gla", "attn", 2, max_n=n)
+
+
+ALL_SETS = ("core", "table3", "decode", "pipeline", "sp", "moe", "adam",
+            "small", "small-decode")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sets", default="all",
+                    help="comma list of: " + ",".join(ALL_SETS))
+    args = ap.parse_args()
+    sets = ALL_SETS if args.sets == "all" else tuple(args.sets.split(","))
+    ex = Exporter(args.out_dir)
+    t0 = time.time()
+    build(ex, sets)
+    ex.write_manifest()
+    print(f"total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+# Model configuration shared by every L2 module and mirrored by the Rust
+# `config` crate module.  Presets correspond to paper Table 2, scaled to
+# this testbed (see DESIGN.md "Hardware-Adaptation").
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 2048
+    d_model: int = 128
+    n_heads: int = 2
+    d_head: int = 64           # per-head dim (Dk == Dv == d_head)
+    n_layers: int = 2
+    layout: str = "LL"         # 'L' = Linear-MoE block, 'N' = attention-MoE
+    lsm: str = "gla"           # LSM instance for 'L' layers
+    chunk: int = 64            # LSM / attention kernel chunk size
+    n_experts: int = 4
+    top_k: int = 2
+    d_ffn: int = 128           # per-expert FFN hidden dim
+    capacity_factor: float = 2.0
+    aux_loss_coef: float = 0.01
+    rms_eps: float = 1e-5
+    rope_theta: float = 10000.0
+
+    def __post_init__(self):
+        assert len(self.layout) == self.n_layers, (
+            f"layout {self.layout!r} length != n_layers {self.n_layers}")
+        assert set(self.layout) <= {"L", "N"}
+        assert self.top_k <= self.n_experts
+
+    @property
+    def d_qkv(self):
+        return self.n_heads * self.d_head
+
+    def with_(self, **kw):
+        d = asdict(self)
+        d.update(kw)
+        return ModelConfig(**d)
+
+
+def layout(n_layers: int, hybrid: bool) -> str:
+    """Paper §3.3: hybrid = one quarter attention layers, pattern LLLN."""
+    if not hybrid:
+        return "L" * n_layers
+    s = "".join("N" if (i % 4 == 3) else "L" for i in range(n_layers))
+    return s
+
+
+# Presets.  `tiny` gates the test suite + default artifacts; `small` is the
+# end-to-end loss-curve scale (paper A0.3B-2B analogue at 1-CPU scale);
+# `a0p3b`/`a1b` are shape-faithful paper configs used by the analytical
+# memory model only (never compiled on this testbed).
+PRESETS = {
+    "tiny": ModelConfig(),
+    "tiny-hybrid": ModelConfig(n_layers=4, layout=layout(4, True)),
+    "small": ModelConfig(
+        vocab=4096, d_model=256, n_heads=4, d_head=64, n_layers=4,
+        layout="LLLL", n_experts=8, top_k=2, d_ffn=256),
+    "small-hybrid": ModelConfig(
+        vocab=4096, d_model=256, n_heads=4, d_head=64, n_layers=4,
+        layout=layout(4, True), n_experts=8, top_k=2, d_ffn=256),
+    # Paper Table 2 (for memcost only).
+    "a0p3b": ModelConfig(
+        vocab=151936, d_model=1024, n_heads=8, d_head=128, n_layers=12,
+        layout="L" * 12, n_experts=64, top_k=8, d_ffn=896),
+    "a1b": ModelConfig(
+        vocab=151936, d_model=2048, n_heads=16, d_head=128, n_layers=16,
+        layout="L" * 16, n_experts=64, top_k=8, d_ffn=1024),
+}

@@ -1,0 +1,107 @@
+# L1 baseline: chunked causal softmax attention as a Pallas kernel.
+#
+# This is the quadratic comparator for Table 3 / Fig 4 / Fig 5 (the paper's
+# "Baseline" / FlashAttention-2 role).  Flash-style online softmax: grid
+# over (batch*head, q-chunk); the kernel streams k/v chunks with a
+# fori_loop, maintaining running max / normalizer, so the full (N, N)
+# score matrix never materializes.
+#
+# interpret=True only (see pallas_lsm.py).
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _ref_attention(q, k, v, scale):
+    n = q.shape[-2]
+    s = jnp.einsum("bhnd,bhmd->bhnm", q, k) * scale
+    mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+    s = jnp.where(mask, s, -jnp.inf)
+    return jnp.einsum("bhnm,bhmv->bhnv", jax.nn.softmax(s, axis=-1), v)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, chunk, scale):
+    qc = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale      # (1, C, Dk)
+    dv = v_ref.shape[-1]
+    c = q.shape[1]
+
+    def body(kc, carry):
+        acc, m_run, l_run = carry
+        k = k_ref[0, pl.dslice(kc * chunk, chunk), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(kc * chunk, chunk), :].astype(jnp.float32)
+        s = q[0] @ k.T                              # (C, C)
+        # causal mask: query index qc*C+i >= key index kc*C+j
+        qi = qc * chunk + jax.lax.broadcasted_iota(jnp.int32, (c, chunk), 0)
+        kj = kc * chunk + jax.lax.broadcasted_iota(jnp.int32, (c, chunk), 1)
+        s = jnp.where(qi >= kj, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((c, dv), jnp.float32)
+    m0 = jnp.full((c,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((c,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, qc + 1, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def softmax_attention(q, k, v, chunk=64, scale=None, interpret=True):
+    """Causal softmax attention.  q,k:(B,H,N,Dk) v:(B,H,N,Dv) -> (B,H,N,Dv)."""
+    b, h, n, dk = q.shape
+    dv = v.shape[-1]
+    assert n % chunk == 0
+    if scale is None:
+        scale = dk ** -0.5
+    bh, nq = b * h, n // chunk
+    qf = q.reshape(bh, n, dk)
+    kf = k.reshape(bh, n, dk)
+    vf = v.reshape(bh, n, dv)
+
+    o = pl.pallas_call(
+        functools.partial(_attn_kernel, chunk=chunk, scale=scale),
+        grid=(bh, nq),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda i, j: (i, j, 0)),
+            # whole-K/V residency per program: on real TPU this would be a
+            # second kv grid axis; interpret-mode CPU makes streaming via
+            # dslice equivalent and simpler.
+            pl.BlockSpec((1, n, dk), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, n, dv), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, dv), v.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return o.reshape(b, h, n, dv)
+
+
+# Differentiable wrapper (same recompute-backward pattern as
+# pallas_lsm.lsm_ad; see that module's comment).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def attention_ad(q, k, v, chunk=64, scale=None):
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    return _ref_attention(q, k, v, scale)
+
+
+def _attn_ad_fwd(q, k, v, chunk, scale):
+    return softmax_attention(q, k, v, chunk=chunk, scale=scale), (q, k, v)
+
+
+def _attn_ad_bwd(chunk, scale, res, ct):
+    q, k, v = res
+    s = scale if scale is not None else q.shape[-1] ** -0.5
+    _, vjp = jax.vjp(lambda a, b, c: _ref_attention(a, b, c, s), q, k, v)
+    return vjp(ct)
+
+
+attention_ad.defvjp(_attn_ad_fwd, _attn_ad_bwd)

@@ -1,0 +1,292 @@
+# Chunkwise-parallel formulations of the unified LSM recurrence.
+#
+# Every LSM instance in paper Table 1 that we ship factors into
+#
+#     o_chunk = o_intra (parallel, within-chunk, matmul-shaped)
+#             + o_inter (q_chunk applied to the carried state M)
+#     M_new   = decay(chunk) <> M + contribution(chunk)
+#
+# which is exactly the structure LASP (paper App. A.3, Alg. 2) exploits for
+# sequence parallelism: `chunk_state_*` computes the per-chunk state
+# contribution that is AllGather-ed across SP ranks, and `chunk_output_*`
+# combines the local intra-chunk output with the prefix state.
+#
+# These are pure-jnp; pallas_lsm.py wraps the same single-chunk math in a
+# Pallas grid, and tests/test_kernels.py checks both against ref.py.
+#
+# Numerical-stability policy (documented in DESIGN.md): vector-gated
+# instances (GLA / HGRN2 / RWKV6) compute the intra-chunk term in the
+# factored form (Q*exp(G)) @ (K*exp(-G))^T, which requires the per-token
+# log-decay to be bounded below.  The model layer (lsm.py) parameterizes
+# log(alpha) = -GATE_CAP * sigmoid(z) with GATE_CAP = 0.25, so over a chunk
+# of 64 tokens exp(-G) <= e^16 -- comfortably inside f32.  Scalar-decay
+# instances use the pairwise-ratio form exp(G_i - G_j) (i >= j), which is
+# <= 1 for any decay strength, so they need no bound.
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# Upper bound on the per-token *negative* log-decay for vector gates.
+GATE_CAP = 0.25
+
+
+def causal_mask(c, dtype=jnp.float32, inclusive=True):
+    """(c, c) lower-triangular mask; inclusive keeps the diagonal."""
+    m = jnp.tril(jnp.ones((c, c), dtype=bool), 0 if inclusive else -1)
+    return m.astype(dtype)
+
+
+def unit_lower_inv(a):
+    """Invert (I + A) for strictly-lower-triangular A (..., C, C).
+
+    A is nilpotent (A^C = 0) so (I+A)^{-1} = sum_k (-A)^k, computed with
+    ceil(log2(C)) matmuls via (I+B)(I+B^2)(I+B^4)... , B = -A.  This is
+    matmul-only (MXU-friendly on TPU) -- no triangular solve needed.
+    """
+    c = a.shape[-1]
+    eye = jnp.eye(c, dtype=a.dtype)
+    b = -a
+    inv = eye + b
+    p = b
+    for _ in range(max(0, math.ceil(math.log2(max(c, 2))) - 1)):
+        p = p @ p
+        inv = inv + inv @ p
+    return inv
+
+
+# ---------------------------------------------------------------------------
+# Single-chunk primitives.  All take per-chunk tensors:
+#   q, k : (..., C, Dk)   v : (..., C, Dv)   m : (..., Dk, Dv)
+#   scalar gate log-decays g : (..., C)   vector g : (..., C, Dk)
+# and return (o, m_new).  `...` is any leading batch shape (B, H) or ().
+# ---------------------------------------------------------------------------
+
+
+def chunk_bla(q, k, v, m):
+    """BLA:  no decay."""
+    mask = causal_mask(q.shape[-2], q.dtype)
+    attn = (q @ jnp.swapaxes(k, -1, -2)) * mask
+    o = attn @ v + q @ m
+    m_new = m + jnp.swapaxes(k, -1, -2) @ v
+    return o, m_new
+
+
+def chunk_scalar_decay(q, k, v, g, m):
+    """Scalar decay; g = log(alpha) per token, shape (..., C), g <= 0.
+
+    Intra term uses the pairwise-ratio form exp(G_i - G_j) <= 1 (i >= j),
+    stable for arbitrarily strong decay.
+    """
+    gc = jnp.cumsum(g, axis=-1)                      # inclusive cumsum
+    ratio = gc[..., :, None] - gc[..., None, :]      # G_i - G_j
+    mask = causal_mask(q.shape[-2], q.dtype)
+    # mask *before* exp: for i < j the ratio is positive and can overflow
+    # under strong decay (exp(inf) * 0 = NaN); clamp those lanes to -inf.
+    d = jnp.exp(jnp.where(mask > 0, ratio, -jnp.inf))
+    attn = (q @ jnp.swapaxes(k, -1, -2)) * d
+    o = attn @ v + jnp.exp(gc)[..., :, None] * (q @ m)
+    g_last = gc[..., -1:]
+    k_scaled = k * jnp.exp(g_last - gc)[..., :, None]
+    m_new = jnp.exp(g_last)[..., :, None] * m + jnp.swapaxes(k_scaled, -1, -2) @ v
+    return o, m_new
+
+
+def chunk_vector_decay(q, k, v, g, m):
+    """Vector decay; g = log(alpha) per token per dim, (..., C, Dk), g <= 0.
+
+    Requires g >= -GATE_CAP per token (see module docstring).
+    """
+    gc = jnp.cumsum(g, axis=-2)                      # (..., C, Dk)
+    q_s = q * jnp.exp(gc)
+    k_s = k * jnp.exp(-gc)
+    mask = causal_mask(q.shape[-2], q.dtype)
+    attn = (q_s @ jnp.swapaxes(k_s, -1, -2)) * mask
+    o = attn @ v + q_s @ m
+    g_last = gc[..., -1:, :]                         # (..., 1, Dk)
+    k_rest = k * jnp.exp(g_last - gc)
+    m_new = jnp.exp(g_last[..., 0, :, None]) * m + jnp.swapaxes(k_rest, -1, -2) @ v
+    return o, m_new
+
+
+def chunk_delta(q, k, v, beta, m):
+    """DeltaNet (WY representation, Yang et al. 2024c).
+
+    With w_t = beta_t (v_t - k_t M_{t-1}) the in-chunk recurrence becomes
+    (I + A) W = diag(beta) (V - K M),  A = strict_tril(diag(beta) K K^T),
+    so W is recovered with one nilpotent inverse; then
+    M_new = M + K^T W  and  o_t = q_t M + sum_{j<=t} (q_t . k_j) w_j.
+    """
+    c = q.shape[-2]
+    kk = k @ jnp.swapaxes(k, -1, -2)                       # (..., C, C)
+    a = (beta[..., :, None] * kk) * causal_mask(c, q.dtype, inclusive=False)
+    rhs = beta[..., :, None] * (v - k @ m)
+    w = unit_lower_inv(a) @ rhs                            # (..., C, Dv)
+    m_new = m + jnp.swapaxes(k, -1, -2) @ w
+    attn = (q @ jnp.swapaxes(k, -1, -2)) * causal_mask(c, q.dtype)
+    o = q @ m + attn @ w
+    return o, m_new
+
+
+def chunk_gated_delta(q, k, v, g, beta, m):
+    """Gated DeltaNet: scalar decay g = log(alpha) composed with delta rule.
+
+    M_t = a_t (I - b_t k_t^T k_t) M_{t-1} + b_t k_t^T v_t.  Absorbing the
+    decay into rescaled keys (k_t' = k_t * exp(G_t)) reduces to the plain
+    delta chunk on rescaled inputs; we use the direct stable form: carry the
+    decay inside the within-chunk solve by rescaling K rows by exp(-(G_t -
+    G_j)) pairwise.  Implementation below follows the same WY derivation
+    with w_t = b_t (v_t - k_t D_t M ...) adapted for the scalar gate.
+    """
+    c = q.shape[-2]
+    gc = jnp.cumsum(g, axis=-1)                            # (..., C)
+    # Pairwise decays r_{tj} = exp(G_t - G_j) for t >= j ( <= 1, stable);
+    # mask before exp so the i < j lanes cannot overflow to inf.
+    incl = causal_mask(c, q.dtype)
+    diff = gc[..., :, None] - gc[..., None, :]
+    ratio = jnp.exp(jnp.where(incl > 0, diff, -jnp.inf))
+    kk = k @ jnp.swapaxes(k, -1, -2)
+    a = (beta[..., :, None] * kk * ratio) * causal_mask(c, q.dtype, inclusive=False)
+    rhs = beta[..., :, None] * (v - jnp.exp(gc)[..., :, None] * (k @ m))
+    w = unit_lower_inv(a) @ rhs
+    # o_t = exp(G_t) q_t M + sum_{j<=t} (q_t.k_j) exp(G_t - G_j) w_j
+    attn = (q @ jnp.swapaxes(k, -1, -2)) * ratio * causal_mask(c, q.dtype)
+    o = jnp.exp(gc)[..., :, None] * (q @ m) + attn @ w
+    g_last = gc[..., -1:]
+    k_rest = k * jnp.exp(g_last - gc)[..., :, None]
+    m_new = jnp.exp(g_last)[..., :, None] * m + jnp.swapaxes(k_rest, -1, -2) @ w
+    return o, m_new
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence chunked runners: scan the single-chunk primitive over the
+# sequence.  q,k:(B,H,N,Dk) v:(B,H,N,Dv); N must be divisible by chunk.
+# ---------------------------------------------------------------------------
+
+
+def _to_chunks(t, c):
+    b, h, n = t.shape[:3]
+    return t.reshape(b, h, n // c, c, *t.shape[3:]).swapaxes(0, 2).swapaxes(1, 2)
+
+
+def _from_chunks(t):
+    # (NC, B, H, C, ...) -> (B, H, N, ...)
+    nc, b, h, c = t.shape[:4]
+    return t.swapaxes(1, 2).swapaxes(0, 2).reshape(b, h, nc * c, *t.shape[4:])
+
+
+def _run(chunk_fn, q, k, v, extras, chunk, m0):
+    b, h, n, dk = k.shape
+    dv = v.shape[-1]
+    assert n % chunk == 0, f"N={n} not divisible by chunk={chunk}"
+    if m0 is None:
+        m0 = jnp.zeros((b, h, dk, dv), dtype=jnp.float32)
+    xs = tuple(_to_chunks(t, chunk) for t in (q, k, v) + tuple(extras))
+
+    def body(m, ts):
+        o, m_new = chunk_fn(*ts, m)
+        return m_new, o
+
+    m_final, o = jax.lax.scan(body, m0, xs)
+    return _from_chunks(o), m_final
+
+
+def bla(q, k, v, chunk=64, m0=None):
+    return _run(chunk_bla, q, k, v, (), chunk, m0)
+
+
+def simple_decay(q, k, v, alpha, chunk=64, m0=None):
+    g = jnp.log(alpha)
+    return _run(chunk_scalar_decay, q, k, v, (g,), chunk, m0)
+
+
+def vector_decay(q, k, v, alpha, chunk=64, m0=None):
+    g = jnp.log(alpha)
+    return _run(chunk_vector_decay, q, k, v, (g,), chunk, m0)
+
+
+def hgrn2(q, k, v, alpha, chunk=64, m0=None):
+    return vector_decay(q, 1.0 - alpha, v, alpha, chunk, m0)
+
+
+def delta_rule(q, k, v, beta, chunk=64, m0=None):
+    return _run(chunk_delta, q, k, v, (beta,), chunk, m0)
+
+
+def gated_delta_rule(q, k, v, alpha, beta, chunk=64, m0=None):
+    g = jnp.log(alpha)
+    return _run(
+        lambda qq, kk, vv, gg, bb, m: chunk_gated_delta(qq, kk, vv, gg, bb, m),
+        q, k, v, (g, beta), chunk, m0,
+    )
+
+
+CHUNKED = {
+    "bla": (bla, "none"),
+    "retention": (simple_decay, "scalar"),
+    "lightning": (simple_decay, "scalar"),
+    "mamba2": (simple_decay, "scalar"),
+    "gla": (vector_decay, "vector"),
+    "rwkv6": (vector_decay, "vector"),
+    "hgrn2": (hgrn2, "vector"),
+    "deltanet": (delta_rule, "beta"),
+    "gated_deltanet": (gated_delta_rule, "scalar+beta"),
+}
+
+
+# ---------------------------------------------------------------------------
+# LASP sequence-parallel primitives (paper App. A.3).
+#
+# chunk_state: the per-rank "M_t = K_t^T V_t (with decay)" that Alg. 1/2
+#   line 6 computes before the AllGather.  Returns (m_contrib, log_decay)
+#   where the prefix state folds as  M_prefix' = exp(ld) <> M_prefix + mc.
+# chunk_output: Alg. 2 lines 8-11 -- intra output + q applied to the
+#   gathered prefix state.
+# These are what aot.py lowers as `sp_state_*` / `sp_output_*` artifacts;
+# the Rust coordinator performs the AllGather / prefix-scan between them.
+# ---------------------------------------------------------------------------
+
+
+def sp_chunk_state(kind, k, v, gates):
+    """Per-rank state contribution. k:(B,H,C,Dk) v:(B,H,C,Dv).
+    Returns (m_contrib:(B,H,Dk,Dv), log_decay:(B,H,Dk)) -- log_decay is the
+    total per-dim log decay across this chunk (zeros when the instance has
+    no decay), so ranks fold prefix states as
+        M' = exp(log_decay)[:, None] * M_prev + m_contrib.
+    """
+    b, h, c, dk = k.shape
+    if kind == "none":
+        mc = jnp.swapaxes(k, -1, -2) @ v
+        ld = jnp.zeros((b, h, dk), jnp.float32)
+    elif kind == "scalar":
+        g = jnp.log(gates)                            # (B,H,C)
+        gc = jnp.cumsum(g, axis=-1)
+        g_last = gc[..., -1:]
+        k_s = k * jnp.exp(g_last - gc)[..., :, None]
+        mc = jnp.swapaxes(k_s, -1, -2) @ v
+        ld = jnp.broadcast_to(g_last, (b, h, dk)).astype(jnp.float32)
+    elif kind == "vector":
+        g = jnp.log(gates)                            # (B,H,C,Dk)
+        gc = jnp.cumsum(g, axis=-2)
+        g_last = gc[..., -1:, :]
+        k_s = k * jnp.exp(g_last - gc)
+        mc = jnp.swapaxes(k_s, -1, -2) @ v
+        ld = g_last[..., 0, :]
+    else:
+        raise ValueError(f"sp_chunk_state: unsupported kind {kind!r}")
+    return mc, ld
+
+
+def sp_chunk_output(kind, q, k, v, gates, m_prefix):
+    """Per-rank output given the gathered prefix state (Alg. 2 lines 8-11)."""
+    if kind == "none":
+        o, _ = chunk_bla(q, k, v, m_prefix)
+    elif kind == "scalar":
+        o, _ = chunk_scalar_decay(q, k, v, jnp.log(gates), m_prefix)
+    elif kind == "vector":
+        o, _ = chunk_vector_decay(q, k, v, jnp.log(gates), m_prefix)
+    else:
+        raise ValueError(f"sp_chunk_output: unsupported kind {kind!r}")
+    return o

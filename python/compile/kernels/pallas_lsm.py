@@ -1,0 +1,226 @@
+# L1: Pallas kernels for the unified LSM recurrence (paper Eq. 5).
+#
+# One grid program per (batch*head, chunk).  The chunk axis is the
+# *sequential* grid dimension: the carried memory state M lives in an
+# output ref that every chunk step of the same (b,h) maps to the same
+# block, so state flows chunk -> chunk exactly like the recurrence.  The
+# within-chunk math is the chunkwise-parallel formulation from chunked.py
+# (matmul-shaped => MXU-friendly on real TPU).
+#
+# TPU adaptation (DESIGN.md "Hardware-Adaptation"): the paper's Triton
+# kernels tile for SRAM/warps; here BlockSpec expresses the HBM->VMEM
+# schedule: per grid step the kernel touches q/k/v chunks of (C, D) plus
+# the (Dk, Dv) state -- VMEM footprint = C*(2Dk+2Dv) + 2*Dk*Dv floats
+# (~ 90 KB at C=64, D=128), far under the ~16 MB VMEM budget, and every
+# inner op is a (C,Dk)x(Dk,C)/(C,C)x(C,Dv) matmul.
+#
+# MUST run with interpret=True: on CPU-PJRT, interpret-mode pallas_call
+# traces the kernel body into plain HLO, which is what aot.py ships to the
+# Rust runtime.  Real-TPU lowering emits a Mosaic custom-call the CPU
+# plugin cannot execute.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import chunked
+
+
+def _flatten_bh(t):
+    b, h = t.shape[:2]
+    return t.reshape(b * h, *t.shape[2:])
+
+
+def _kernel_body(kind, q_ref, k_ref, v_ref, g_ref, b_ref, m0_ref, o_ref, m_ref):
+    """Shared kernel body; g_ref / b_ref are None for instances without
+    that gate.  Block shapes carry a leading 1 (the bh axis)."""
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        m_ref[...] = m0_ref[...]
+
+    m = m_ref[...].astype(jnp.float32)
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+
+    if kind == "none":
+        o, m_new = chunked.chunk_bla(q, k, v, m)
+    elif kind == "scalar":
+        g = jnp.log(g_ref[...].astype(jnp.float32))
+        o, m_new = chunked.chunk_scalar_decay(q, k, v, g, m)
+    elif kind == "vector":
+        g = jnp.log(g_ref[...].astype(jnp.float32))
+        o, m_new = chunked.chunk_vector_decay(q, k, v, g, m)
+    elif kind == "beta":
+        beta = b_ref[...].astype(jnp.float32)
+        o, m_new = chunked.chunk_delta(q, k, v, beta, m)
+    elif kind == "scalar+beta":
+        g = jnp.log(g_ref[...].astype(jnp.float32))
+        beta = b_ref[...].astype(jnp.float32)
+        o, m_new = chunked.chunk_gated_delta(q, k, v, g, beta, m)
+    else:
+        raise ValueError(f"unknown gate kind {kind!r}")
+
+    o_ref[...] = o.astype(o_ref.dtype)
+    m_ref[...] = m_new
+
+
+def lsm_pallas(kind, q, k, v, gates=None, beta=None, chunk=64, m0=None,
+               interpret=True):
+    """Run the chunkwise LSM kernel.
+
+    kind  : 'none' | 'scalar' | 'vector' | 'beta' | 'scalar+beta'
+    q, k  : (B, H, N, Dk)   v : (B, H, N, Dv)
+    gates : (B, H, N) scalar-decay alpha or (B, H, N, Dk) vector alpha
+    beta  : (B, H, N) delta write strength
+    m0    : (B, H, Dk, Dv) initial state (zeros when None)
+    Returns (o : (B, H, N, Dv), m_final : (B, H, Dk, Dv)).
+    """
+    b, h, n, dk = q.shape
+    dv = v.shape[-1]
+    assert n % chunk == 0, f"N={n} % chunk={chunk} != 0"
+    bh, nc = b * h, n // chunk
+    if m0 is None:
+        m0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    qf, kf, vf = _flatten_bh(q), _flatten_bh(k), _flatten_bh(v)
+    m0f = _flatten_bh(m0)
+
+    chunk_spec = lambda d: pl.BlockSpec((1, chunk, d), lambda i, j: (i, j, 0))
+    state_spec = pl.BlockSpec((1, dk, dv), lambda i, j: (i, 0, 0))
+
+    operands = [qf, kf, vf]
+    in_specs = [chunk_spec(dk), chunk_spec(dk), chunk_spec(dv)]
+    has_g = kind in ("scalar", "vector", "scalar+beta")
+    has_b = kind in ("beta", "scalar+beta")
+    if has_g:
+        gf = _flatten_bh(gates)
+        if kind == "vector":
+            in_specs.append(chunk_spec(dk))
+        else:
+            in_specs.append(pl.BlockSpec((1, chunk), lambda i, j: (i, j)))
+        operands.append(gf)
+    if has_b:
+        operands.append(_flatten_bh(beta))
+        in_specs.append(pl.BlockSpec((1, chunk), lambda i, j: (i, j)))
+    operands.append(m0f)
+    in_specs.append(state_spec)
+
+    def body(*refs):
+        o_ref, m_ref = refs[-2], refs[-1]
+        it = iter(refs[:-2])
+        q_ref, k_ref, v_ref = next(it), next(it), next(it)
+        g_ref = next(it) if has_g else None
+        b_ref = next(it) if has_b else None
+        m0_ref = next(it)
+        _kernel_body(kind, q_ref, k_ref, v_ref, g_ref, b_ref, m0_ref,
+                     o_ref, m_ref)
+
+    o, m_final = pl.pallas_call(
+        body,
+        grid=(bh, nc),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda i, j: (i, j, 0)),
+            state_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n, dv), v.dtype),
+            jax.ShapeDtypeStruct((bh, dk, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)
+
+    return o.reshape(b, h, n, dv), m_final.reshape(b, h, dk, dv)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper.  pallas_call has no autodiff rule, so training
+# uses jax.custom_vjp: the *forward* is the Pallas kernel (the hot path that
+# also serves decode/prefill), and the *backward* recomputes the forward
+# through the chunkwise-jnp formulation and differentiates it -- exact
+# gradients with linear memory, i.e. kernel-level activation recomputation
+# (the same trade Megatron's selective recompute makes).
+# ---------------------------------------------------------------------------
+
+
+def _chunked_apply(kind, chunk, q, k, v, gates, beta, m0):
+    if kind == "none":
+        return chunked.bla(q, k, v, chunk, m0)
+    if kind == "scalar":
+        return chunked.simple_decay(q, k, v, gates, chunk, m0)
+    if kind == "vector":
+        return chunked.vector_decay(q, k, v, gates, chunk, m0)
+    if kind == "beta":
+        return chunked.delta_rule(q, k, v, beta, chunk, m0)
+    if kind == "scalar+beta":
+        return chunked.gated_delta_rule(q, k, v, gates, beta, chunk, m0)
+    raise ValueError(kind)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def lsm_ad(kind, chunk, q, k, v, gates, beta, m0):
+    return _chunked_apply(kind, chunk, q, k, v, gates, beta, m0)
+
+
+def _lsm_ad_fwd(kind, chunk, q, k, v, gates, beta, m0):
+    out = lsm_pallas(kind, q, k, v, gates=gates, beta=beta, chunk=chunk,
+                     m0=m0)
+    return out, (q, k, v, gates, beta, m0)
+
+
+def _lsm_ad_bwd(kind, chunk, res, ct):
+    _, vjp = jax.vjp(
+        lambda *a: _chunked_apply(kind, chunk, *a), *res)
+    return vjp(ct)
+
+
+lsm_ad.defvjp(_lsm_ad_fwd, _lsm_ad_bwd)
+
+
+# Named wrappers matching ref.ORACLES / chunked.CHUNKED signatures.
+
+def bla(q, k, v, chunk=64, m0=None, interpret=True):
+    return lsm_pallas("none", q, k, v, chunk=chunk, m0=m0, interpret=interpret)
+
+
+def simple_decay(q, k, v, alpha, chunk=64, m0=None, interpret=True):
+    return lsm_pallas("scalar", q, k, v, gates=alpha, chunk=chunk, m0=m0,
+                      interpret=interpret)
+
+
+def vector_decay(q, k, v, alpha, chunk=64, m0=None, interpret=True):
+    return lsm_pallas("vector", q, k, v, gates=alpha, chunk=chunk, m0=m0,
+                      interpret=interpret)
+
+
+def hgrn2(q, k, v, alpha, chunk=64, m0=None, interpret=True):
+    return lsm_pallas("vector", q, 1.0 - alpha, v, gates=alpha, chunk=chunk,
+                      m0=m0, interpret=interpret)
+
+
+def delta_rule(q, k, v, beta, chunk=64, m0=None, interpret=True):
+    return lsm_pallas("beta", q, k, v, beta=beta, chunk=chunk, m0=m0,
+                      interpret=interpret)
+
+
+def gated_delta_rule(q, k, v, alpha, beta, chunk=64, m0=None, interpret=True):
+    return lsm_pallas("scalar+beta", q, k, v, gates=alpha, beta=beta,
+                      chunk=chunk, m0=m0, interpret=interpret)
+
+
+PALLAS = {
+    "bla": (bla, "none"),
+    "retention": (simple_decay, "scalar"),
+    "lightning": (simple_decay, "scalar"),
+    "mamba2": (simple_decay, "scalar"),
+    "gla": (vector_decay, "vector"),
+    "rwkv6": (vector_decay, "vector"),
+    "hgrn2": (hgrn2, "vector"),
+    "deltanet": (delta_rule, "beta"),
+    "gated_deltanet": (gated_delta_rule, "scalar+beta"),
+}

@@ -1,0 +1,131 @@
+# Pure-jnp sequential oracles for every LSM instance (paper Table 1).
+#
+# These are the *ground truth* for the chunked formulations in chunked.py
+# and the Pallas kernels in pallas_lsm.py: each one executes the unified
+# recurrence   M_s = Theta_s <> M_{s-1} + f(k_s^T, v_s)   (paper Eq. 5)
+# token-by-token with jax.lax.scan, exactly as written in the paper.
+#
+# Shape conventions (all functions):
+#   q, k : (B, H, N, Dk)      v : (B, H, N, Dv)
+#   scalar gates  : (B, H, N)          -- per-token scalar decay
+#   vector gates  : (B, H, N, Dk)      -- per-token per-dim decay
+#   beta          : (B, H, N)          -- delta-rule write strength
+#   returns (o, M_final) with o : (B, H, N, Dv), M_final : (B, H, Dk, Dv)
+#
+# All oracles accept an optional initial state `m0 : (B, H, Dk, Dv)` so the
+# LASP sequence-parallel decomposition (chunk-local state + prefix state)
+# can be validated against them.
+
+import jax
+import jax.numpy as jnp
+
+
+def _scan_heads(step, q, k, v, extras, m0):
+    """Run `step` over the token axis with scan; extras is a tuple of
+    per-token tensors each shaped (B, H, N, ...)."""
+    B, H, N, Dk = k.shape
+    Dv = v.shape[-1]
+    if m0 is None:
+        m0 = jnp.zeros((B, H, Dk, Dv), dtype=jnp.float32)
+    # scan over the token axis: move N to the front.
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (q, k, v) + tuple(extras))
+
+    def body(m, ts):
+        o, m_new = step(m, *ts)
+        return m_new, o
+
+    m_final, o = jax.lax.scan(body, m0, xs)
+    return jnp.moveaxis(o, 0, 2), m_final
+
+
+def bla(q, k, v, m0=None):
+    """Basic linear attention:  M_s = M_{s-1} + k_s^T v_s,  o_s = q_s M_s."""
+
+    def step(m, qs, ks, vs):
+        m = m + ks[..., :, None] * vs[..., None, :]
+        return jnp.einsum("bhk,bhkv->bhv", qs, m), m
+
+    return _scan_heads(step, q, k, v, (), m0)
+
+
+def simple_decay(q, k, v, alpha, m0=None):
+    """Scalar-decay linear attention (Lightning Attn / RetNet / Mamba2):
+    M_s = a_s M_{s-1} + k_s^T v_s.  alpha : (B, H, N)."""
+
+    def step(m, qs, ks, vs, a):
+        m = a[..., None, None] * m + ks[..., :, None] * vs[..., None, :]
+        return jnp.einsum("bhk,bhkv->bhv", qs, m), m
+
+    return _scan_heads(step, q, k, v, (alpha,), m0)
+
+
+def vector_decay(q, k, v, alpha, m0=None):
+    """Vector-gated linear attention (GLA / HGRN2 / RWKV6):
+    M_s = diag(a_s) M_{s-1} + k_s^T v_s.  alpha : (B, H, N, Dk)."""
+
+    def step(m, qs, ks, vs, a):
+        m = a[..., :, None] * m + ks[..., :, None] * vs[..., None, :]
+        return jnp.einsum("bhk,bhkv->bhv", qs, m), m
+
+    return _scan_heads(step, q, k, v, (alpha,), m0)
+
+
+def delta_rule(q, k, v, beta, m0=None):
+    """DeltaNet:  M_s = (I - b_s k_s^T k_s) M_{s-1} + b_s k_s^T v_s.
+    Callers should L2-normalize k so (I - b k^T k) is a contraction."""
+
+    def step(m, qs, ks, vs, b):
+        # m <- m + b * k^T (v - k m)
+        km = jnp.einsum("bhk,bhkv->bhv", ks, m)
+        m = m + b[..., None, None] * ks[..., :, None] * (vs - km)[..., None, :]
+        return jnp.einsum("bhk,bhkv->bhv", qs, m), m
+
+    return _scan_heads(step, q, k, v, (beta,), m0)
+
+
+def gated_delta_rule(q, k, v, alpha, beta, m0=None):
+    """Gated DeltaNet:  M_s = a_s (I - b_s k_s^T k_s) M_{s-1} + b_s k_s^T v_s.
+    alpha, beta : (B, H, N)."""
+
+    def step(m, qs, ks, vs, a, b):
+        m = a[..., None, None] * m
+        km = jnp.einsum("bhk,bhkv->bhv", ks, m)
+        m = m + b[..., None, None] * ks[..., :, None] * (vs - km)[..., None, :]
+        return jnp.einsum("bhk,bhkv->bhv", qs, m), m
+
+    return _scan_heads(step, q, k, v, (alpha, beta), m0)
+
+
+def hgrn2(q, k, v, alpha, m0=None):
+    """HGRN2:  M_s = diag(a_s) M_{s-1} + (1 - a_s)^T v_s.
+    The input gate is tied to the forget gate: k_s = 1 - a_s.  `k` is
+    ignored (pass anything shape-compatible); kept in the signature so all
+    oracles share one calling convention."""
+    return vector_decay(q, 1.0 - alpha, v, alpha, m0)
+
+
+def softmax_attention(q, k, v, scale=None):
+    """Causal softmax attention (the quadratic Baseline, paper Eq. 1-2)."""
+    B, H, N, Dk = q.shape
+    if scale is None:
+        scale = Dk ** -0.5
+    s = jnp.einsum("bhnd,bhmd->bhnm", q, k) * scale
+    mask = jnp.tril(jnp.ones((N, N), dtype=bool))
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhnm,bhmv->bhnv", p, v)
+
+
+# Registry: instance name -> (oracle fn, gate kind).
+# gate kinds: none | scalar | vector | beta | scalar+beta
+ORACLES = {
+    "bla": (bla, "none"),
+    "retention": (simple_decay, "scalar"),
+    "lightning": (simple_decay, "scalar"),
+    "mamba2": (simple_decay, "scalar"),
+    "gla": (vector_decay, "vector"),
+    "rwkv6": (vector_decay, "vector"),
+    "hgrn2": (hgrn2, "vector"),
+    "deltanet": (delta_rule, "beta"),
+    "gated_deltanet": (gated_delta_rule, "scalar+beta"),
+}

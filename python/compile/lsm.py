@@ -1,0 +1,276 @@
+# L2: LSM token-mixing layers (paper Fig. 1, "LSM layer").
+#
+# Every instance shares the frame: project q/k/v (+ instance gates) from
+# the block input, run the chunkwise kernel from kernels/pallas_lsm.py,
+# per-head RMS-normalize the output, apply a swish output gate for the
+# gated instances, and project back to d_model.  The instance-specific
+# part is exactly the gate parameterization feeding the unified recurrence
+# M_s = Theta_s <> M_{s-1} + k_s^T v_s (paper Eq. 5 / Table 1).
+#
+# Gate parameterizations (DESIGN.md "numerics policy"):
+#   - vector gates (GLA / HGRN2 / RWKV6): log(alpha) = -GATE_CAP*sigmoid(z),
+#     satisfying the chunked-kernel stability bound exactly.
+#   - scalar gates (Mamba2): alpha = exp(-softplus(A) * dt), dt = softplus;
+#     the scalar kernel's pairwise-ratio form is stable for any strength.
+#   - Retention: fixed per-head decay a_h = 1 - 2^(-5-h) (RetNet).
+#   - DeltaNet: k L2-normalized, beta = sigmoid.
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import attn as attn_kernel
+from .kernels import chunked, pallas_lsm, ref
+from .kernels.chunked import GATE_CAP
+
+INSTANCES = ("bla", "retention", "gla", "deltanet", "mamba2", "hgrn2", "rwkv6")
+GATED_OUTPUT = {"gla", "mamba2", "hgrn2", "rwkv6"}   # swish output gate
+GATE_KIND = {
+    "bla": "none", "retention": "scalar", "gla": "vector",
+    "deltanet": "beta", "mamba2": "scalar", "hgrn2": "vector",
+    "rwkv6": "vector",
+}
+
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def _dense(key, shape, scale=None):
+    fan_in = shape[0]
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def retention_decay(n_heads):
+    """RetNet per-head decay: a_h = 1 - 2^{-5-h}."""
+    return jnp.array([1.0 - 2.0 ** (-5.0 - h) for h in range(n_heads)],
+                     jnp.float32)
+
+
+def init_lsm_params(key, cfg: ModelConfig):
+    """Parameters for one LSM token-mixing layer of instance cfg.lsm."""
+    inst = cfg.lsm
+    d, dq = cfg.d_model, cfg.d_qkv
+    keys = iter(jax.random.split(key, 12))
+    p = {
+        "wq": _dense(next(keys), (d, dq)),
+        "wv": _dense(next(keys), (d, dq)),
+        "wo": _dense(next(keys), (dq, d)),
+        "onorm": jnp.ones((cfg.n_heads, cfg.d_head), jnp.float32),
+    }
+    if inst != "hgrn2":                       # hgrn2 ties k to the gate
+        p["wk"] = _dense(next(keys), (d, dq))
+    if inst in ("gla", "hgrn2", "rwkv6"):     # vector gate
+        p["wa"] = _dense(next(keys), (d, dq))
+        p["ba"] = jnp.zeros((dq,), jnp.float32)
+    if inst == "mamba2":                      # scalar per-head decay + dt
+        p["wdt"] = _dense(next(keys), (d, cfg.n_heads))
+        p["bdt"] = jnp.full((cfg.n_heads,), 0.5, jnp.float32)
+        p["a_log"] = jnp.zeros((cfg.n_heads,), jnp.float32)
+    if inst == "deltanet":
+        p["wb"] = _dense(next(keys), (d, cfg.n_heads))
+    if inst == "rwkv6":                       # token-shift mix coefficient
+        p["mu"] = jnp.full((d,), 0.5, jnp.float32)
+    if inst in GATED_OUTPUT:
+        p["wg"] = _dense(next(keys), (d, dq))
+    return p
+
+
+def _split_heads(t, h):
+    b, n, hd = t.shape
+    return t.reshape(b, n, h, hd // h).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(t):
+    b, h, n, dh = t.shape
+    return t.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def _gates(cfg: ModelConfig, p, x, xs):
+    """Instance-specific (q, k, v, gates, beta) from block input x (B,N,d).
+    xs is the token-shifted input (for rwkv6)."""
+    inst, h = cfg.lsm, cfg.n_heads
+    xin = xs if inst == "rwkv6" else x
+    q = _split_heads(xin @ p["wq"], h)
+    v = _split_heads(xin @ p["wv"], h)
+    gates = beta = None
+    if inst == "hgrn2":
+        a = jnp.exp(-GATE_CAP * jax.nn.sigmoid(xin @ p["wa"] + p["ba"]))
+        gates = _split_heads(a, h)
+        k = 1.0 - gates
+    else:
+        k = _split_heads(xin @ p["wk"], h)
+    if inst in ("gla", "rwkv6"):
+        a = jnp.exp(-GATE_CAP * jax.nn.sigmoid(xin @ p["wa"] + p["ba"]))
+        gates = _split_heads(a, h)
+    elif inst == "retention":
+        dec = retention_decay(h)              # (H,)
+        b_, n_ = x.shape[0], x.shape[1]
+        gates = jnp.broadcast_to(dec[None, :, None], (b_, h, n_))
+    elif inst == "mamba2":
+        dt = jax.nn.softplus(xin @ p["wdt"] + p["bdt"])       # (B,N,H)
+        a = jax.nn.softplus(p["a_log"])                        # (H,)
+        gates = jnp.exp(-a[None, None, :] * dt).transpose(0, 2, 1)
+        # Mamba2 writes b_s k^T v: fold dt into k.
+        k = k * dt.transpose(0, 2, 1)[..., None]
+    elif inst == "deltanet":
+        beta = jax.nn.sigmoid(xin @ p["wb"]).transpose(0, 2, 1)  # (B,H,N)
+        k = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + 1e-6)
+        q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+    return q, k, v, gates, beta
+
+
+def _token_shift(x, mu, x_prev=None):
+    """RWKV-style token shift: mix each token with its predecessor."""
+    if x_prev is None:
+        shifted = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    else:
+        shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1]], axis=1)
+    return x + mu * (shifted - x)
+
+
+def lsm_layer(cfg: ModelConfig, p, x, m0=None, backend="pallas"):
+    """Apply the LSM token-mixing layer.  x: (B, N, d_model).
+    Returns (y, m_final).  backend: pallas | chunked | ref."""
+    inst = cfg.lsm
+    xs = _token_shift(x, p["mu"]) if inst == "rwkv6" else x
+    q, k, v, gates, beta = _gates(cfg, p, x, xs)
+    kind = GATE_KIND[inst]
+
+    if backend == "pallas":
+        # lsm_ad = Pallas forward + recompute-chunked backward (custom_vjp)
+        # so the same call site serves training and inference artifacts.
+        o, m = pallas_lsm.lsm_ad(kind, cfg.chunk, q, k, v, gates, beta, m0)
+    elif backend == "chunked":
+        if kind == "none":
+            o, m = chunked.bla(q, k, v, cfg.chunk, m0)
+        elif kind == "scalar":
+            o, m = chunked.simple_decay(q, k, v, gates, cfg.chunk, m0)
+        elif kind == "vector":
+            o, m = chunked.vector_decay(q, k, v, gates, cfg.chunk, m0)
+        elif kind == "beta":
+            o, m = chunked.delta_rule(q, k, v, beta, cfg.chunk, m0)
+    elif backend == "ref":
+        if kind == "none":
+            o, m = ref.bla(q, k, v, m0)
+        elif kind == "scalar":
+            o, m = ref.simple_decay(q, k, v, gates, m0)
+        elif kind == "vector":
+            o, m = ref.vector_decay(q, k, v, gates, m0)
+        elif kind == "beta":
+            o, m = ref.delta_rule(q, k, v, beta, m0)
+    else:
+        raise ValueError(backend)
+
+    o = rms_norm(o, p["onorm"][None, :, None, :], cfg.rms_eps)
+    o = _merge_heads(o)
+    if inst in GATED_OUTPUT:
+        o = o * jax.nn.silu(xs @ p["wg"])
+    return o @ p["wo"], m
+
+
+def lsm_layer_decode(cfg: ModelConfig, p, x_t, m, x_prev=None):
+    """Single-token decode step.  x_t: (B, d).  m: (B, H, Dk, Dv).
+    Returns (y_t, m_new, x_t-for-shift).  Constant time & memory -- this is
+    the paper's linear-inference claim (Fig. 5)."""
+    inst = cfg.lsm
+    x = x_t[:, None, :]                      # (B, 1, d)
+    if inst == "rwkv6":
+        xs = _token_shift(x, p["mu"], x_prev)
+    else:
+        xs = x
+    q, k, v, gates, beta = _gates(cfg, p, x, xs)
+    kind = GATE_KIND[inst]
+    # One-token recurrence update (ref.py math, no scan needed).
+    qs, ks, vs = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    if kind == "none":
+        m_new = m + ks[..., :, None] * vs[..., None, :]
+    elif kind == "scalar":
+        a = gates[:, :, 0]
+        m_new = a[..., None, None] * m + ks[..., :, None] * vs[..., None, :]
+    elif kind == "vector":
+        a = gates[:, :, 0]
+        m_new = a[..., :, None] * m + ks[..., :, None] * vs[..., None, :]
+    elif kind == "beta":
+        b = beta[:, :, 0]
+        km = jnp.einsum("bhk,bhkv->bhv", ks, m)
+        m_new = m + b[..., None, None] * ks[..., :, None] * (vs - km)[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", qs, m_new)          # (B, H, Dv)
+    o = rms_norm(o, p["onorm"][None], cfg.rms_eps)
+    o = o.reshape(x_t.shape[0], -1)
+    if inst in GATED_OUTPUT:
+        o = o * jax.nn.silu(xs[:, 0] @ p["wg"])
+    return o @ p["wo"], m_new, x_t
+
+
+# ---------------------------------------------------------------------------
+# Standard softmax-attention layer ('N' layers in hybrid stacks; the
+# quadratic Baseline).  RoPE position encoding, flash-style Pallas kernel.
+# ---------------------------------------------------------------------------
+
+
+def init_attn_params(key, cfg: ModelConfig):
+    d, dq = cfg.d_model, cfg.d_qkv
+    keys = jax.random.split(key, 4)
+    return {
+        "wq": _dense(keys[0], (d, dq)),
+        "wk": _dense(keys[1], (d, dq)),
+        "wv": _dense(keys[2], (d, dq)),
+        "wo": _dense(keys[3], (dq, d)),
+    }
+
+
+def rope(x, pos, theta):
+    """x: (B, H, N, Dh), pos: (N,) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]   # (N, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def attn_layer(cfg: ModelConfig, p, x, backend="pallas", pos0=0):
+    """Standard causal self-attention layer.  x: (B, N, d)."""
+    h = cfg.n_heads
+    n = x.shape[1]
+    q = _split_heads(x @ p["wq"], h)
+    k = _split_heads(x @ p["wk"], h)
+    v = _split_heads(x @ p["wv"], h)
+    pos = pos0 + jnp.arange(n, dtype=jnp.int32)
+    q, k = rope(q, pos, cfg.rope_theta), rope(k, pos, cfg.rope_theta)
+    if backend == "pallas":
+        o = attn_kernel.attention_ad(q, k, v, min(cfg.chunk, n), None)
+    else:
+        o = ref.softmax_attention(q, k, v)
+    return _merge_heads(o) @ p["wo"]
+
+
+def attn_layer_decode(cfg: ModelConfig, p, x_t, kcache, vcache, pos):
+    """KV-cache decode step.  x_t: (B, d); caches: (B, H, Nmax, Dh);
+    pos: scalar int32 index of the current token.  Cost grows with the
+    cache length -- the quadratic comparator for Fig. 5."""
+    h = cfg.n_heads
+    b = x_t.shape[0]
+    q = (x_t @ p["wq"]).reshape(b, h, 1, cfg.d_head)
+    k = (x_t @ p["wk"]).reshape(b, h, 1, cfg.d_head)
+    v = (x_t @ p["wv"]).reshape(b, h, 1, cfg.d_head)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)[:, :, 0]
+    k = rope(k, posv, cfg.rope_theta)[:, :, 0]
+    kcache = jax.lax.dynamic_update_index_in_dim(kcache, k, pos, 2)
+    vcache = jax.lax.dynamic_update_index_in_dim(vcache, v[:, :, 0], pos, 2)
+    nmax = kcache.shape[2]
+    s = jnp.einsum("bhd,bhnd->bhn", q, kcache) * (cfg.d_head ** -0.5)
+    mask = jnp.arange(nmax)[None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    pweights = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhn,bhnv->bhv", pweights, vcache).reshape(b, -1)
+    return o @ p["wo"], kcache, vcache

@@ -1,0 +1,204 @@
+# L2: the Linear-MoE model (paper Fig. 1).
+#
+# L x stacked blocks; each block = (RMSNorm -> token mixer -> residual) +
+# (RMSNorm -> MoE layer -> residual).  The mixer is the LSM layer for 'L'
+# positions in the layout string and standard softmax attention for 'N'
+# positions (hybrid models, paper §2.1.2).  Embeddings are tied to the LM
+# head.  Training objective: next-token cross-entropy + switch aux loss.
+#
+# Everything here is lowered to HLO text by aot.py and executed from Rust;
+# Python never runs at training/inference time.
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import lsm as lsm_mod
+from . import moe as moe_mod
+from .lsm import rms_norm
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    k_embed, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = []
+    for i, ch in enumerate(cfg.layout):
+        k_mix, k_moe = jax.random.split(layer_keys[i])
+        mixer = (lsm_mod.init_lsm_params(k_mix, cfg) if ch == "L"
+                 else lsm_mod.init_attn_params(k_mix, cfg))
+        layers.append({
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "mixer": mixer,
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "moe": moe_mod.init_moe_params(k_moe, cfg),
+        })
+    return {
+        "embed": jax.random.normal(k_embed, (cfg.vocab, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def block_apply(cfg: ModelConfig, ch, lp, x, backend="pallas",
+                moe_strategy="grouped", pos0=0):
+    """One Linear-MoE / attention-MoE block.  x: (B, N, d)."""
+    h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+    if ch == "L":
+        y, _ = lsm_mod.lsm_layer(cfg, lp["mixer"], h, backend=backend)
+    else:
+        y = lsm_mod.attn_layer(cfg, lp["mixer"], h, backend=backend,
+                               pos0=pos0)
+    x = x + y
+    h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+    y, aux = moe_mod.moe_layer(cfg, lp["moe"], h, strategy=moe_strategy)
+    return x + y, aux
+
+
+def forward(cfg: ModelConfig, params, tokens, backend="pallas",
+            moe_strategy="grouped"):
+    """tokens: (B, N) int32 -> (logits (B, N, V), aux_loss)."""
+    x = params["embed"][tokens]
+    aux_total = 0.0
+    for i, ch in enumerate(cfg.layout):
+        x, aux = block_apply(cfg, ch, params["layers"][i], x,
+                             backend=backend, moe_strategy=moe_strategy)
+        aux_total = aux_total + aux
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = x @ params["embed"].T
+    return logits, aux_total
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets, backend="pallas",
+            moe_strategy="grouped"):
+    """Next-token CE + aux.  targets < 0 are masked (padding / packing
+    boundaries, paper §2.2.4)."""
+    logits, aux = forward(cfg, params, tokens, backend, moe_strategy)
+    mask = (targets >= 0).astype(jnp.float32)
+    tsafe = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tsafe[..., None], axis=-1)[..., 0]
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + cfg.aux_loss_coef * aux, ce
+
+
+def fwd_bwd(cfg: ModelConfig, params, tokens, targets, backend="pallas",
+            moe_strategy="grouped"):
+    """(loss, ce, grads) -- the per-worker unit of data parallelism: Rust
+    all-reduces `grads` across DP ranks before the optimizer step."""
+    (loss, ce), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, targets, backend, moe_strategy),
+        has_aux=True)(params)
+    return loss, ce, grads
+
+
+# ---------------------------------------------------------------------------
+# Adam (the optimizer state lives in Rust between steps; this is the pure
+# update rule, also exported per flat bucket for the ZeRO-1 distributed
+# optimizer -- see aot.py `adam_bucket`).
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+
+
+def adam_update(p, g, m, v, step, lr):
+    """step: int32 scalar (1-based), lr: f32 scalar.  Pytree-polymorphic."""
+    step_f = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1 ** step_f
+    bc2 = 1.0 - ADAM_B2 ** step_f
+
+    flat_p, treedef = jax.tree_util.tree_flatten(p)
+    flat_g = treedef.flatten_up_to(g)
+    flat_m = treedef.flatten_up_to(m)
+    flat_v = treedef.flatten_up_to(v)
+    new_p, new_m, new_v = [], [], []
+    for pi, gi, mi, vi in zip(flat_p, flat_g, flat_m, flat_v):
+        mi = ADAM_B1 * mi + (1 - ADAM_B1) * gi
+        vi = ADAM_B2 * vi + (1 - ADAM_B2) * gi * gi
+        mhat = mi / bc1
+        vhat = vi / bc2
+        new_p.append(pi - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(mi)
+        new_v.append(vi)
+    unflat = jax.tree_util.tree_unflatten
+    return unflat(treedef, new_p), unflat(treedef, new_m), unflat(treedef, new_v)
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, lr, tokens, targets,
+               backend="pallas", moe_strategy="grouped"):
+    """Fused single-worker train step: fwd + bwd + Adam.
+    Returns (loss, ce, new_params, new_m, new_v)."""
+    loss, ce, grads = fwd_bwd(cfg, params, tokens, targets, backend,
+                              moe_strategy)
+    new_p, new_m, new_v = adam_update(params, grads, m, v, step, lr)
+    return loss, ce, new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Decode (paper Fig. 5): LSM layers carry a constant-size (Dk, Dv) state
+# per head; attention layers carry a growing KV cache.  One artifact per
+# (variant, cache size); the Rust inference driver owns the loop.
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch, max_n=None):
+    """Per-layer decode state.  For 'L': {m, xprev}; for 'N': {k, v}."""
+    states = []
+    for ch in cfg.layout:
+        if ch == "L":
+            states.append({
+                "m": jnp.zeros((batch, cfg.n_heads, cfg.d_head, cfg.d_head),
+                               jnp.float32),
+                "xprev": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            })
+        else:
+            assert max_n is not None, "hybrid decode needs max_n"
+            states.append({
+                "k": jnp.zeros((batch, cfg.n_heads, max_n, cfg.d_head),
+                               jnp.float32),
+                "v": jnp.zeros((batch, cfg.n_heads, max_n, cfg.d_head),
+                               jnp.float32),
+            })
+    return states
+
+
+def decode_step(cfg: ModelConfig, params, states, token, pos):
+    """One decode step.  token: (B,) int32; pos: scalar int32.
+    Returns (logits (B, V), new_states)."""
+    x = params["embed"][token]                    # (B, d)
+    new_states = []
+    for i, ch in enumerate(cfg.layout):
+        lp = params["layers"][i]
+        st = states[i]
+        h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+        if ch == "L":
+            y, m_new, xprev = lsm_mod.lsm_layer_decode(
+                cfg, lp["mixer"], h, st["m"], st["xprev"])
+            new_states.append({"m": m_new, "xprev": xprev})
+        else:
+            y, kc, vc = lsm_mod.attn_layer_decode(
+                cfg, lp["mixer"], h, st["k"], st["v"], pos)
+            new_states.append({"k": kc, "v": vc})
+        x = x + y
+        h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+        y, _ = moe_mod.moe_layer(cfg, lp["moe"], h[:, None, :],
+                                 strategy="grouped")
+        x = x + y[:, 0]
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x @ params["embed"].T, new_states
+
+
+def param_count(cfg: ModelConfig):
+    """(total, activated) parameter counts -- paper's AxB-yB naming."""
+    p = init_params(cfg)
+    total = sum(x.size for x in jax.tree_util.tree_leaves(p))
+    moe_total = sum(
+        x.size for lp in p["layers"] for x in jax.tree_util.tree_leaves(
+            lp["moe"]))
+    moe_active = 0
+    for lp in p["layers"]:
+        mp = lp["moe"]
+        per_exp = (mp["w1"].size + mp["w2"].size + mp["w3"].size) // cfg.n_experts
+        moe_active += mp["router"].size + per_exp * cfg.top_k
+    return total, total - moe_total + moe_active

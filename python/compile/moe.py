@@ -1,0 +1,163 @@
+# L2: Mixture-of-Experts layer (paper Fig. 1, "MoE layer").
+#
+# Standard top-k softmax routing with a switch-style auxiliary
+# load-balancing loss, SwiGLU experts, and capacity-based token dispatch --
+# the mechanisms the paper keeps from SOTA open-source MoE (Qwen2-MoE).
+#
+# Three execution strategies reproduce Table 4 (top):
+#   dense   : every expert over every token (oracle; E x FLOPs).
+#   loop    : capacity dispatch, then a python loop over experts -> E small
+#             matmul chains in the HLO (the naive Megatron baseline).
+#   grouped : the same dispatch, one batched einsum over (E, cap, d) -- the
+#             GroupedGEMM analogue.
+# The MegaBlocks analogue lives in the Rust coordinator (exact-fit tiled
+# dispatch over the `moe_expert_tile` artifact; see coordinator/moe.rs) --
+# its defining trait is *dynamic* group sizes, which static HLO cannot
+# express.
+#
+# All strategies are numerically identical up to dropped-token handling
+# (dense drops nothing; loop/grouped drop tokens past expert capacity).
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def _dense_init(key, shape):
+    return jax.random.normal(key, shape, jnp.float32) / math.sqrt(shape[-2])
+
+
+def init_moe_params(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ffn, cfg.n_experts
+    keys = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(keys[0], (d, e), jnp.float32) * 0.02,
+        "w1": _dense_init(keys[1], (e, d, f)),   # gate proj
+        "w3": _dense_init(keys[2], (e, d, f)),   # up proj
+        "w2": _dense_init(keys[3], (e, f, d)),   # down proj
+    }
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    """Static per-expert capacity."""
+    c = int(math.ceil(n_tokens * cfg.top_k / cfg.n_experts
+                      * cfg.capacity_factor))
+    return max(c, cfg.top_k)
+
+
+def _topk(probs, k):
+    """Iterative-argmax top-k.  jax.lax.top_k lowers to the HLO `topk`
+    instruction, which the xla_extension 0.5.1 text parser (the Rust
+    runtime's XLA) does not know; k is small (2-8) so k argmax sweeps lower
+    to plain reduces and cost the same.  Returns (values, indices)."""
+    vals, idxs = [], []
+    masked = probs
+    for _ in range(k):
+        i = jnp.argmax(masked, axis=-1)
+        v = jnp.take_along_axis(masked, i[..., None], axis=-1)[..., 0]
+        vals.append(v)
+        idxs.append(i.astype(jnp.int32))
+        masked = masked * (1.0 - jax.nn.one_hot(i, probs.shape[-1],
+                                                dtype=probs.dtype)) - \
+            jax.nn.one_hot(i, probs.shape[-1], dtype=probs.dtype)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def route(cfg: ModelConfig, p, x):
+    """Top-k routing.  x: (T, d).
+    Returns (gates (T,k), idx (T,k) int32, aux_loss scalar)."""
+    logits = x @ p["router"]                       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = _topk(probs, cfg.top_k)
+    gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    # Switch-Transformer aux loss: E * sum_e f_e * P_e
+    one_hot = jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32)
+    f_e = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)          # (E,)
+    p_e = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(f_e * p_e) / cfg.top_k
+    return gates, idx, aux
+
+
+def _expert_ffn(xe, w1, w3, w2):
+    """SwiGLU expert.  xe: (..., d)."""
+    return (jax.nn.silu(xe @ w1) * (xe @ w3)) @ w2
+
+
+def _dispatch(cfg: ModelConfig, x, gates, idx, cap):
+    """Capacity-based dispatch.  Returns (buf (E, cap, d), slot (T,k),
+    keep (T,k)).  Tokens past capacity are dropped (slot -> scrap row)."""
+    t = x.shape[0]
+    e = cfg.n_experts
+    flat_idx = idx.reshape(-1)                                  # (T*k,)
+    # Position of each assignment within its expert, in token order.
+    one_hot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)      # (T*k, E)
+    pos_in_e = jnp.cumsum(one_hot, axis=0) - 1                  # (T*k, E)
+    slot = jnp.take_along_axis(pos_in_e, flat_idx[:, None], 1)[:, 0]
+    keep = slot < cap
+    slot_c = jnp.where(keep, slot, cap)                         # cap = scrap
+    buf = jnp.zeros((e, cap + 1, x.shape[1]), x.dtype)
+    tok = jnp.repeat(jnp.arange(t), cfg.top_k)
+    buf = buf.at[flat_idx, slot_c].set(x[tok])
+    return buf, slot_c.reshape(idx.shape), keep.reshape(idx.shape)
+
+
+def _combine(x, out, idx, slot, keep, gates):
+    """Gather expert outputs back to token order and mix by gate weight."""
+    t, k = idx.shape
+    flat = out[idx.reshape(-1), slot.reshape(-1)].reshape(t, k, -1)
+    flat = flat * (gates * keep)[..., None]
+    return jnp.sum(flat, axis=1)
+
+
+def moe_layer(cfg: ModelConfig, p, x, strategy="grouped"):
+    """MoE layer.  x: (B, N, d) -> (y, aux_loss)."""
+    b, n, d = x.shape
+    xt = x.reshape(b * n, d)
+    gates, idx, aux = route(cfg, p, xt)
+
+    if strategy == "dense":
+        # (E, T, f) -- every expert everywhere; exact, no drops.
+        y_all = jax.vmap(_expert_ffn, in_axes=(None, 0, 0, 0))(
+            xt, p["w1"], p["w3"], p["w2"])                     # (E, T, d)
+        one_hot = jax.nn.one_hot(idx, cfg.n_experts,
+                                 dtype=jnp.float32)        # (T,k,E)
+        w = jnp.einsum("tk,tke->et", gates, one_hot)
+        y = jnp.einsum("et,etd->td", w, y_all)
+        return y.reshape(b, n, d), aux
+
+    cap = capacity(cfg, b * n)
+    buf, slot, keep = _dispatch(cfg, xt, gates, idx, cap)
+    if strategy == "grouped":
+        out = _expert_ffn(buf, p["w1"], p["w3"], p["w2"])       # batched
+    elif strategy == "loop":
+        outs = [
+            _expert_ffn(buf[e], p["w1"][e], p["w3"][e], p["w2"][e])
+            for e in range(cfg.n_experts)
+        ]
+        out = jnp.stack(outs)
+    else:
+        raise ValueError(f"unknown MoE strategy {strategy!r}")
+    y = _combine(xt, out, idx, slot, keep, gates)
+    return y.reshape(b, n, d), aux
+
+
+# --- pieces lowered as standalone artifacts for the Rust EP dispatcher ----
+
+
+def router_fn(cfg: ModelConfig, router_w, x):
+    """Standalone router for expert-parallel dispatch in Rust.
+    x: (T, d) -> (gates (T,k), idx (T,k) int32)."""
+    logits = x @ router_w
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = _topk(probs, cfg.top_k)
+    gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    return gates, idx.astype(jnp.int32)
+
+
+def expert_tile_fn(w1, w3, w2, xt):
+    """One expert over one tile of tokens -- the MegaBlocks-analogue unit
+    the Rust coordinator schedules per occupied tile.  xt: (TILE, d)."""
+    return _expert_ffn(xt, w1, w3, w2)

@@ -1,0 +1,131 @@
+# L2: artifact-boundary functions for the distributed runtime.
+#
+# The Rust coordinator composes these small HLO modules into the paper's
+# parallelism schemes:
+#   - pipeline parallelism (PP): embed / block / head, fwd + recompute-bwd
+#     per stage (Megatron-style activation recomputation: the bwd artifact
+#     re-runs the forward inside, so only activations cross stages).
+#   - LASP sequence parallelism (paper App. A.3): sp_state_* computes the
+#     per-rank memory-state contribution (Alg. 1/2 line 6, the thing that
+#     is AllGather-ed); sp_output_* combines intra-chunk output with the
+#     gathered prefix state (lines 8-11).
+#   - hybrid-model SP (paper §2.2.2): attn_sp computes local attention
+#     output from the all-gathered K/V (the Llama3-style strategy).
+#   - expert parallelism (EP): router / expert pieces the Rust token
+#     dispatcher schedules around its all-to-all.
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import lsm as lsm_mod
+from . import model as model_mod
+from . import moe as moe_mod
+from .kernels import chunked
+from .lsm import rms_norm
+
+
+# --------------------------- pipeline stages -------------------------------
+
+
+def embed_fwd(embed, tokens):
+    return embed[tokens]
+
+
+def embed_bwd(tokens, gx, vocab):
+    """Scatter-add token grads into the embedding table."""
+    g = jnp.zeros((vocab, gx.shape[-1]), gx.dtype)
+    return g.at[tokens.reshape(-1)].add(gx.reshape(-1, gx.shape[-1]))
+
+
+def block_fwd(cfg: ModelConfig, ch, lp, x):
+    """One block forward; returns (y, aux)."""
+    return model_mod.block_apply(cfg, ch, lp, x)
+
+
+def block_bwd(cfg: ModelConfig, ch, lp, x, gy):
+    """Recompute-backward for one block: re-runs the forward, then VJP.
+    Total loss = ce + coef * sum(aux), so the aux cotangent is coef.
+    Returns (gparams, gx)."""
+    def f(lp_, x_):
+        y, aux = model_mod.block_apply(cfg, ch, lp_, x_)
+        return y, aux
+
+    _, vjp = jax.vjp(f, lp, x)
+    gparams, gx = vjp((gy, jnp.float32(cfg.aux_loss_coef)))
+    return gparams, gx
+
+
+def head_fwd(cfg: ModelConfig, final_norm, embed, x, targets):
+    """Final norm + tied LM head + CE.  Returns (ce,)."""
+    h = rms_norm(x, final_norm, cfg.rms_eps)
+    logits = h @ embed.T
+    mask = (targets >= 0).astype(jnp.float32)
+    tsafe = jnp.maximum(targets, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tsafe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def head_bwd(cfg: ModelConfig, final_norm, embed, x, targets):
+    """Returns (g_final_norm, g_embed, gx, ce)."""
+    ce, vjp = jax.vjp(
+        lambda fn, e, xx: head_fwd(cfg, fn, e, xx, targets),
+        final_norm, embed, x)
+    gfn, gemb, gx = vjp(jnp.float32(1.0))
+    return gfn, gemb, gx, ce
+
+
+# ------------------------ LASP SP primitives --------------------------------
+# Kernel-level (paper Alg. 1/2 operate on Q/K/V chunks directly).
+
+
+def sp_state(kind, k, v, gates):
+    return chunked.sp_chunk_state(kind, k, v, gates)
+
+
+def sp_output(kind, q, k, v, gates, m_prefix):
+    return chunked.sp_chunk_output(kind, q, k, v, gates, m_prefix)
+
+
+def attn_sp(q_local, k_full, v_full, pos0, scale=None):
+    """Hybrid-SP attention: local Q chunk against all-gathered K/V
+    (paper §2.2.2 'On Standard Attention Module').  pos0: this rank's
+    global offset (scalar int32) for the causal mask."""
+    b, h, c, dk = q_local.shape
+    n = k_full.shape[2]
+    if scale is None:
+        scale = dk ** -0.5
+    s = jnp.einsum("bhcd,bhnd->bhcn", q_local, k_full) * scale
+    qi = pos0 + jnp.arange(c, dtype=jnp.int32)[:, None]
+    kj = jnp.arange(n, dtype=jnp.int32)[None, :]
+    s = jnp.where(qi >= kj, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhcn,bhnv->bhcv", p, v_full)
+
+
+# ------------------------------ MoE EP pieces -------------------------------
+
+
+def moe_router(cfg: ModelConfig, router_w, x):
+    return moe_mod.router_fn(cfg, router_w, x)
+
+
+def moe_expert(w1, w3, w2, x):
+    """One expert over a fixed-size group of tokens (tile or capacity)."""
+    return moe_mod.expert_tile_fn(w1, w3, w2, x)
+
+
+def moe_grouped(w1, w3, w2, buf):
+    """All local experts over capacity-grouped tokens: one batched einsum.
+    w*: (E, ...), buf: (E, cap, d)."""
+    return (jax.nn.silu(buf @ w1) * (buf @ w3)) @ w2
+
+
+# ------------------------------ eval ----------------------------------------
+
+
+def eval_loss(cfg: ModelConfig, params, tokens, targets):
+    """Forward-only loss for held-out perplexity (Tables 5/6 substitution)."""
+    loss, ce = model_mod.loss_fn(cfg, params, tokens, targets)
+    return loss, ce

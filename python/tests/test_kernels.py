@@ -1,0 +1,209 @@
+# L1 correctness: chunked formulations and Pallas kernels vs the
+# sequential oracles in ref.py -- the CORE correctness signal of the repo.
+#
+# hypothesis sweeps shapes / dtypes / chunk sizes / gate strengths; each
+# instance is checked in three forms (ref == chunked == pallas) plus the
+# nonzero-initial-state path used by LASP and decode.
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from compile.kernels import attn, chunked, pallas_lsm, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.sampled_from([(1, 1, 64, 8, 8), (2, 2, 128, 16, 32),
+                        (1, 3, 96, 24, 16)])
+CHUNKS = st.sampled_from([16, 32, 64])
+SEEDS = st.integers(min_value=0, max_value=2 ** 31 - 1)
+
+
+def make_inputs(seed, dims, scale=0.5):
+    b, h, n, dk, dv = dims
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, h, n, dk)), jnp.float32) * scale
+    k = jnp.asarray(rng.normal(size=(b, h, n, dk)), jnp.float32) * scale
+    v = jnp.asarray(rng.normal(size=(b, h, n, dv)), jnp.float32) * scale
+    a_s = jnp.asarray(rng.uniform(0.7, 1.0, size=(b, h, n)), jnp.float32)
+    a_v = jnp.asarray(
+        np.exp(-chunked.GATE_CAP * rng.uniform(0, 1, size=(b, h, n, dk))),
+        jnp.float32)
+    beta = jnp.asarray(rng.uniform(0.05, 0.95, size=(b, h, n)), jnp.float32)
+    kn = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + 1e-6)
+    m0 = jnp.asarray(rng.normal(size=(b, h, dk, dv)), jnp.float32) * scale
+    return q, k, v, a_s, a_v, beta, kn, m0
+
+
+def assert_close(a, b, atol=5e-4, rtol=5e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=atol, rtol=rtol)
+
+
+CASES = [
+    # (name, ref_fn(args), chunked_fn, pallas_fn, which gates)
+    ("bla", "none"),
+    ("retention", "scalar"),
+    ("gla", "vector"),
+    ("hgrn2", "hgrn2"),
+    ("deltanet", "beta"),
+    ("gated_deltanet", "scalar+beta"),
+]
+
+
+def run_all(name, kind, inputs, chunk, m0=None):
+    q, k, v, a_s, a_v, beta, kn, _ = inputs
+    if kind == "none":
+        r = ref.bla(q, k, v, m0)
+        c = chunked.bla(q, k, v, chunk, m0)
+        p = pallas_lsm.bla(q, k, v, chunk, m0)
+    elif kind == "scalar":
+        r = ref.simple_decay(q, k, v, a_s, m0)
+        c = chunked.simple_decay(q, k, v, a_s, chunk, m0)
+        p = pallas_lsm.simple_decay(q, k, v, a_s, chunk, m0)
+    elif kind == "vector":
+        r = ref.vector_decay(q, k, v, a_v, m0)
+        c = chunked.vector_decay(q, k, v, a_v, chunk, m0)
+        p = pallas_lsm.vector_decay(q, k, v, a_v, chunk, m0)
+    elif kind == "hgrn2":
+        r = ref.hgrn2(q, k, v, a_v, m0)
+        c = chunked.hgrn2(q, k, v, a_v, chunk, m0)
+        p = pallas_lsm.hgrn2(q, k, v, a_v, chunk, m0)
+    elif kind == "beta":
+        r = ref.delta_rule(q, kn, v, beta, m0)
+        c = chunked.delta_rule(q, kn, v, beta, chunk, m0)
+        p = pallas_lsm.delta_rule(q, kn, v, beta, chunk, m0)
+    elif kind == "scalar+beta":
+        r = ref.gated_delta_rule(q, kn, v, a_s, beta, m0)
+        c = chunked.gated_delta_rule(q, kn, v, a_s, beta, chunk, m0)
+        p = pallas_lsm.gated_delta_rule(q, kn, v, a_s, beta, chunk, m0)
+    return r, c, p
+
+
+@pytest.mark.parametrize("name,kind", CASES)
+@settings(max_examples=8, deadline=None)
+@given(seed=SEEDS, dims=DIMS, chunk=CHUNKS)
+def test_chunked_and_pallas_match_ref(name, kind, seed, dims, chunk):
+    assume(dims[2] % chunk == 0)
+    inputs = make_inputs(seed, dims)
+    (ro, rm), (co, cm), (po, pm) = run_all(name, kind, inputs, chunk)
+    assert_close(ro, co)
+    assert_close(rm, cm)
+    assert_close(ro, po)
+    assert_close(rm, pm)
+
+
+@pytest.mark.parametrize("name,kind", CASES)
+def test_nonzero_initial_state(name, kind):
+    inputs = make_inputs(7, (2, 2, 128, 16, 32))
+    m0 = inputs[-1]
+    (ro, rm), (co, cm), (po, pm) = run_all(name, kind, inputs, 32, m0=m0)
+    assert_close(ro, co)
+    assert_close(ro, po)
+    assert_close(rm, pm)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=SEEDS, dims=DIMS, chunk=CHUNKS)
+def test_attention_kernel_matches_ref(seed, dims, chunk):
+    assume(dims[2] % min(chunk, dims[2]) == 0)
+    q, k, v, *_ = make_inputs(seed, dims)
+    r = ref.softmax_attention(q, k, v)
+    p = attn.softmax_attention(q, k, v, chunk=min(chunk, q.shape[2]))
+    assert_close(r, p, atol=1e-4, rtol=1e-4)
+
+
+def test_strong_scalar_decay_is_stable():
+    """Scalar-decay pairwise-ratio form must survive near-zero decay."""
+    q, k, v, *_ = make_inputs(3, (1, 1, 128, 16, 16))
+    a = jnp.full((1, 1, 128), 0.01, jnp.float32)     # brutal forgetting
+    ro, rm = ref.simple_decay(q, k, v, a)
+    po, pm = pallas_lsm.simple_decay(q, k, v, a, 32)
+    assert bool(jnp.all(jnp.isfinite(po)))
+    assert_close(ro, po)
+
+
+def test_vector_gate_cap_boundary():
+    """Vector gates exactly at the stability bound alpha=exp(-GATE_CAP)."""
+    q, k, v, *_ = make_inputs(4, (1, 2, 128, 16, 16))
+    a = jnp.full((1, 2, 128, 16), float(np.exp(-chunked.GATE_CAP)))
+    ro, _ = ref.vector_decay(q, k, v, a)
+    po, _ = pallas_lsm.vector_decay(q, k, v, a, 64)
+    assert bool(jnp.all(jnp.isfinite(po)))
+    assert_close(ro, po)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtype_sweep_bla(dtype):
+    q, k, v, *_ = make_inputs(5, (1, 2, 64, 16, 16))
+    q, k, v = q.astype(dtype), k.astype(dtype), v.astype(dtype)
+    ro, _ = ref.bla(q.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32))
+    po, _ = pallas_lsm.bla(q, k, v, 32)
+    tol = 5e-4 if dtype == jnp.float32 else 5e-2
+    assert_close(ro, po.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+def test_unit_lower_inv_exact():
+    rng = np.random.default_rng(0)
+    for c in (4, 16, 33, 64):
+        # entry scale matches the delta kernel's A = beta * K K^T with
+        # L2-normalized k and beta < 1 (unscaled normals make ||B^k||
+        # blow past f32 long before nilpotency cancels it).
+        a = np.tril(rng.normal(size=(c, c)), -1).astype(np.float32)
+        a *= 0.5 / np.sqrt(c)
+        inv = np.asarray(chunked.unit_lower_inv(jnp.asarray(a)))
+        np.testing.assert_allclose(inv @ (np.eye(c) + a), np.eye(c),
+                                   atol=1e-4)
+
+
+def test_gradients_flow_through_pallas_ad():
+    """lsm_ad: Pallas forward + recompute-chunked backward must give the
+    same grads as pure-jnp chunked end to end."""
+    q, k, v, a_s, a_v, beta, kn, m0 = make_inputs(9, (1, 2, 64, 8, 8))
+
+    def loss_ad(q_, k_, v_, g_):
+        o, m = pallas_lsm.lsm_ad("vector", 32, q_, k_, v_, g_, None, None)
+        return jnp.sum(o ** 2) + jnp.sum(m ** 2)
+
+    def loss_ref(q_, k_, v_, g_):
+        o, m = chunked.vector_decay(q_, k_, v_, g_, 32)
+        return jnp.sum(o ** 2) + jnp.sum(m ** 2)
+
+    g1 = jax.grad(loss_ad, argnums=(0, 1, 2, 3))(q, k, v, a_v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(q, k, v, a_v)
+    for a, b in zip(g1, g2):
+        assert_close(a, b, atol=1e-3, rtol=1e-3)
+
+
+def test_sp_decomposition_equals_serial():
+    """LASP (paper Alg. 2): chunk outputs + prefix-folded states == serial
+    execution, for every gate kind, across SP sizes."""
+    q, k, v, a_s, a_v, beta, kn, _ = make_inputs(11, (2, 2, 128, 16, 32))
+    for kind, gates, kk in (("none", None, k), ("scalar", a_s, k),
+                            ("vector", a_v, k)):
+        if kind == "none":
+            o_ref, m_ref = ref.bla(q, kk, v)
+        elif kind == "scalar":
+            o_ref, m_ref = ref.simple_decay(q, kk, v, gates)
+        else:
+            o_ref, m_ref = ref.vector_decay(q, kk, v, gates)
+        for t in (2, 4):
+            nh = q.shape[2] // t
+            m_prefix = jnp.zeros_like(m_ref)
+            outs = []
+            for r in range(t):
+                sl = slice(r * nh, (r + 1) * nh)
+                gsl = None if gates is None else gates[:, :, sl]
+                o = chunked.sp_chunk_output(kind, q[:, :, sl], kk[:, :, sl],
+                                            v[:, :, sl], gsl, m_prefix)
+                mc, ld = chunked.sp_chunk_state(kind, kk[:, :, sl],
+                                                v[:, :, sl], gsl)
+                m_prefix = jnp.exp(ld)[..., None] * m_prefix + mc
+                outs.append(o)
+            assert_close(o_ref, jnp.concatenate(outs, axis=2))
+            assert_close(m_ref, m_prefix)

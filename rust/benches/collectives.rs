@@ -1,0 +1,48 @@
+//! Collectives micro-bench: latency of all-gather / all-reduce /
+//! all-to-all vs payload size and world size (the substrate under every
+//! distributed number in the other benches).
+
+use linear_moe::collectives::Comm;
+use linear_moe::coordinator::metrics::Table;
+use linear_moe::tensor::Tensor;
+
+fn main() {
+    let iters: usize = std::env::var("BENCH_ITERS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(50);
+    let mut table = Table::new(&["op", "world", "elems", "us/op"]);
+    for world in [2usize, 4, 8] {
+        for numel in [1024usize, 65536] {
+            for op in ["all_gather", "all_reduce", "all_to_all"] {
+                let (_c, handles) = Comm::new(world);
+                let t0 = std::time::Instant::now();
+                let joins: Vec<_> = handles.into_iter().map(|h| {
+                    let op = op.to_string();
+                    std::thread::spawn(move || {
+                        for _ in 0..iters {
+                            match op.as_str() {
+                                "all_gather" => {
+                                    h.all_gather(Tensor::zeros(&[numel]));
+                                }
+                                "all_reduce" => {
+                                    h.all_reduce_sum(Tensor::zeros(&[numel])).unwrap();
+                                }
+                                _ => {
+                                    let parts = (0..h.world)
+                                        .map(|_| Tensor::zeros(&[numel / h.world]))
+                                        .collect();
+                                    h.all_to_all(parts).unwrap();
+                                }
+                            }
+                        }
+                    })
+                }).collect();
+                for j in joins { j.join().unwrap(); }
+                let us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+                table.row(&[op.to_string(), world.to_string(),
+                            numel.to_string(), format!("{us:.0}")]);
+            }
+        }
+    }
+    println!("\n=== collectives micro-bench ===");
+    table.print();
+}

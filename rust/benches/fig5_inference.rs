@@ -1,0 +1,59 @@
+//! Paper Fig. 5: inference latency + memory vs decode length.
+//! Linear-MoE (BLA) decodes with a constant-size state; the attention
+//! Baseline's KV cache (power-of-two staircase) grows, so per-token
+//! latency and memory climb with position.
+
+use linear_moe::coordinator::metrics::Table;
+use linear_moe::inference::{greedy, AttnDecoder, LsmDecoder};
+use linear_moe::memcost;
+use linear_moe::runtime::Runtime;
+use linear_moe::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let max_len: usize = std::env::var("BENCH_DECODE_LEN").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(2048);
+    let sizes: Vec<usize> = [128usize, 256, 512, 1024, 2048, 4096]
+        .into_iter().filter(|&n| n <= max_len.max(128)).collect();
+    let rt = Runtime::new("artifacts")?;
+    let batch = 4;
+    let mut lsm = LsmDecoder::new(&rt, "tiny_bla", batch)?;
+    let mut attn = AttnDecoder::new(&rt, "tiny_attn", batch, &sizes)?;
+    let lsm_cfg = lsm.var.config.clone();
+    let attn_cfg = attn.var.config.clone();
+
+    let mut table = Table::new(&[
+        "decode len", "BLA ms/tok", "BLA state KiB", "Attn ms/tok", "KV KiB",
+    ]);
+    let mut tok_l = Tensor::i32(&[batch], vec![1; batch]);
+    let mut tok_a = tok_l.clone();
+    let mut pos = 0usize;
+    for &seg_end in &sizes {
+        let seg = seg_end - pos;
+        let t0 = std::time::Instant::now();
+        for p in pos..seg_end {
+            let lg = lsm.step(&tok_l, p as i32)?;
+            tok_l = greedy(&lg)?;
+        }
+        let lsm_ms = t0.elapsed().as_secs_f64() * 1e3 / seg as f64;
+        let t1 = std::time::Instant::now();
+        for p in pos..seg_end {
+            let lg = attn.step(&tok_a, p as i32)?;
+            tok_a = greedy(&lg)?;
+        }
+        let attn_ms = t1.elapsed().as_secs_f64() * 1e3 / seg as f64;
+        pos = seg_end;
+        table.row(&[
+            seg_end.to_string(),
+            format!("{lsm_ms:.2}"),
+            format!("{:.0}", memcost::decode_state_bytes(&lsm_cfg, batch, seg_end) as f64 / 1024.0),
+            format!("{attn_ms:.2}"),
+            format!("{:.0}", memcost::decode_state_bytes(&attn_cfg, batch, seg_end) as f64 / 1024.0),
+        ]);
+        if pos >= max_len { break; }
+    }
+    println!("\n=== Fig 5: decode latency/memory vs length (batch {batch}) ===");
+    table.print();
+    println!("(measured state: BLA {} KiB constant; attn staircase grows)",
+             lsm.state_bytes() / 1024);
+    Ok(())
+}

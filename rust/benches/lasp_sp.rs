@@ -1,0 +1,70 @@
+//! Paper §2.2.1 / App. A.3: LASP sequence-parallelism scaling.
+//! LASP-2 (one AllGather of d x d states) vs LASP-1 (ring chain) across SP
+//! sizes, with measured communication volume -- the §2.2.2 claim that SP
+//! comm for LSM layers is independent of sequence length, vs the
+//! attention path whose all-gathered K/V grows with N.
+
+use linear_moe::collectives::Comm;
+use linear_moe::coordinator::metrics::Table;
+use linear_moe::coordinator::sp::{AttnSpExecutor, GateKind, SpExecutor, SpMode};
+use linear_moe::rng::Rng;
+use linear_moe::runtime::Runtime;
+use linear_moe::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let spec = rt.manifest.artifact("sp_state_vector")?;
+    let ks = spec.args[0].shape.clone();
+    let (b, h, c, dk) = (ks[0], ks[1], ks[2], ks[3]);
+    drop(rt);
+    let mut table = Table::new(&[
+        "mode", "SP size", "ms/layer", "LSM comm KiB", "attn comm KiB",
+    ]);
+    for t_world in [2usize, 4, 8] {
+        for (label, mode) in [("LASP-2 (AllGather)", SpMode::Lasp2AllGather),
+                              ("LASP-1 (ring)", SpMode::Lasp1Ring)] {
+            let (comm, handles) = Comm::new(t_world);
+            let t0 = std::time::Instant::now();
+            let joins: Vec<_> = handles.into_iter().map(|hdl| {
+                std::thread::spawn(move || {
+                    let rt = Runtime::new("artifacts").unwrap();
+                    let ex = SpExecutor::new(&rt, GateKind::Vector).unwrap();
+                    let attn = if matches!(mode, SpMode::Lasp2AllGather) {
+                        AttnSpExecutor::new(&rt, hdl.world).ok()
+                    } else { None };
+                    let mut rng = Rng::new(hdl.rank as u64);
+                    let mk = |rng: &mut Rng, shape: &[usize]| Tensor::f32(
+                        shape, (0..shape.iter().product::<usize>())
+                            .map(|_| rng.normal() * 0.5).collect());
+                    let q = mk(&mut rng, &[b, h, c, dk]);
+                    let k = mk(&mut rng, &[b, h, c, dk]);
+                    let v = mk(&mut rng, &[b, h, c, dk]);
+                    let g = Tensor::f32(&[b, h, c, dk],
+                        (0..b * h * c * dk).map(|_| (-0.25 * rng.f32()).exp()).collect());
+                    ex.run(&hdl, mode, &q, &k, &v, Some(&g)).unwrap();
+                    if let Some(a) = attn {
+                        a.run(&hdl, &q, &k, &v).unwrap();
+                    }
+                })
+            }).collect();
+            for j in joins { j.join().unwrap(); }
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let (ag, _, p2p, _) = comm.traffic();
+            // attn K/V all-gather = 2 tensors per rank when LASP-2 row
+            let attn_kib = if matches!(mode, SpMode::Lasp2AllGather) {
+                (2 * b * h * c * dk * 4 * t_world) as f64 / 1024.0
+            } else { 0.0 };
+            let lsm_comm = if matches!(mode, SpMode::Lasp2AllGather) {
+                ag as f64 / 1024.0 - attn_kib
+            } else { p2p as f64 / 1024.0 };
+            table.row(&[label.to_string(), t_world.to_string(),
+                        format!("{ms:.0}"), format!("{lsm_comm:.0}"),
+                        format!("{attn_kib:.0}")]);
+        }
+    }
+    println!("\n=== LASP SP scaling (per-rank chunk {c} tokens, d_k {dk}) ===");
+    table.print();
+    println!("(LSM comm is per-layer-pass total across ranks; note it does \
+              not grow with chunk length, while attn K/V comm does)");
+    Ok(())
+}

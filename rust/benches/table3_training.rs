@@ -1,0 +1,65 @@
+//! Paper Table 3 + Fig. 4: training memory (GB, modeled) and throughput
+//! (tokens/s, measured) vs sequence length at fixed tokens/iter.
+//! Paper: seq {2K..16K} x batch {8..1} on 8xA100; here seq {256..2048} x
+//! batch {8..1} (fixed 2048 tokens/iter) on the CPU-PJRT testbed.
+//! The claim under test is the *shape*: Baseline throughput decays with N
+//! and its memory grows; LSM instances stay flat.
+
+use linear_moe::coordinator::metrics::{Table, Throughput};
+use linear_moe::data;
+use linear_moe::memcost;
+use linear_moe::runtime::Runtime;
+use linear_moe::tensor::Tensor;
+
+const SHAPES: &[(usize, usize)] = &[(8, 256), (4, 512), (2, 1024), (1, 2048)];
+const INSTANCES: &[&str] = &[
+    "tiny_attn", "tiny_bla", "tiny_retention", "tiny_gla", "tiny_deltanet",
+    "tiny_mamba2", "tiny_hgrn2", "tiny_rwkv6",
+];
+
+fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::var("BENCH_ITERS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(3);
+    let rt = Runtime::new("artifacts")?;
+    let mut table = Table::new(&[
+        "instance", "seq x batch", "mem MiB (model)", "thpt tok/s", "ms/iter",
+    ]);
+    for tag in INSTANCES {
+        let var = rt.manifest.variant(tag)?.clone();
+        for &(b, n) in SHAPES {
+            let name = format!("train_step_{tag}_b{b}n{n}");
+            let exe = rt.load(&name)?;
+            let mut params = rt.init_params(tag, 0)?;
+            let m = params.zeros_like();
+            let v = params.zeros_like();
+            let mut lm = data::ZipfLm::new(var.config.vocab, 3);
+            let batch = data::batch_from_stream(&mut lm, b, n);
+            let lr = Tensor::scalar_f32(1e-3);
+            let step_t = Tensor::scalar_i32(1);
+            let mut thpt = Throughput::new(b * n, 1);
+            thpt.start();
+            for _ in 0..iters + 1 {
+                let out = exe.run_bundled(&[&params, &m, &v],
+                                          &[&step_t, &lr, &batch.tokens, &batch.targets])?;
+                std::hint::black_box(out[0].item_f32()?);
+                thpt.lap();
+            }
+            // memory: modeled (paper uses A100 GB; flash=false for the
+            // standard-attention Baseline, true/flat for LSM rows)
+            let flash = var.config.layout.chars().all(|c| c == 'L');
+            let mem = memcost::train_bytes(
+                &var.config, b, n, &memcost::ParallelCfg::single(), flash);
+            table.row(&[
+                tag.to_string(),
+                format!("{n}x{b}"),
+                format!("{:.1}", memcost::mib(mem)),
+                format!("{:.0}", thpt.tokens_per_sec()),
+                format!("{:.0}", thpt.mean_ms()),
+            ]);
+            let _ = &mut params;
+        }
+    }
+    println!("\n=== Table 3 / Fig 4: training efficiency (fixed 2048 tokens/iter) ===");
+    table.print();
+    Ok(())
+}

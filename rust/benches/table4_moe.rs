@@ -1,0 +1,50 @@
+//! Paper Table 4 (top): MoE optimization ablation.
+//! Baseline loop-over-experts vs GroupedGEMM (one batched launch) vs
+//! MegaBlocks-style exact-fit tiles (dynamic launch count, no padding).
+
+use linear_moe::bench_util::bench;
+use linear_moe::coordinator::metrics::Table;
+use linear_moe::coordinator::moe_ep::{ExpertWeights, MoeLayer, Strategy};
+use linear_moe::rng::Rng;
+use linear_moe::runtime::Runtime;
+use linear_moe::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::var("BENCH_ITERS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(8);
+    let rt = Runtime::new("artifacts")?;
+    let mut table = Table::new(&[
+        "MoE execution", "time/iter ms", "launches", "padded slots",
+    ]);
+    let layer = MoeLayer::new(&rt, "bench")?;
+    let mut rng = Rng::new(5);
+    let f_dim = 256;
+    let weights = ExpertWeights::random(&mut rng, layer.n_experts, layer.d, f_dim);
+    let t = rt.manifest.artifact("moe_router_bench")?.args[1].shape[0];
+    let router_w = Tensor::f32(&[layer.d, layer.n_experts],
+        (0..layer.d * layer.n_experts).map(|_| rng.normal() * 0.02).collect());
+    let x = Tensor::f32(&[t, layer.d],
+        (0..t * layer.d).map(|_| rng.normal() * 0.5).collect());
+
+    for (name, strat) in [("Baseline (loop)", Strategy::Loop),
+                          ("Grouped GEMM", Strategy::Grouped),
+                          ("MegaBlocks (tiles)", Strategy::MegaBlocks)] {
+        let (_, counts, launches) =
+            layer.forward_local(strat, &router_w, &weights, &x)?;
+        let padded: usize = match strat {
+            Strategy::Loop | Strategy::Grouped => counts.iter()
+                .map(|&c| layer.cap.saturating_sub(c.min(layer.cap))).sum(),
+            Strategy::MegaBlocks => counts.iter()
+                .map(|&c| c.div_ceil(layer.tile) * layer.tile - c).sum(),
+        };
+        let r = bench(name, 2, iters, || {
+            let _ = layer.forward_local(strat, &router_w, &weights, &x).unwrap();
+        });
+        table.row(&[name.to_string(), format!("{:.1}", r.mean_ms),
+                    launches.to_string(), padded.to_string()]);
+    }
+    println!("\n=== Table 4 (top): MoE optimization ({t} tokens, {} experts) ===",
+             layer.n_experts);
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Paper Table 4 (bottom): distributed-training ablation across EP/TP/PP.
+//!
+//! Two parts:
+//!  1. *Memory per worker* for the paper's exact configs on the
+//!     shape-faithful a0p3b preset (modeled; the paper's axis).
+//!  2. *Measured time/iter* for the parallelism schemes this testbed
+//!     executes end-to-end: DP (ZeRO-1 DDP over worker threads), PP
+//!     (GPipe/1F1B over per-layer artifacts), EP (token dispatch).
+//!     One physical core timeshares all workers, so wall-clock reflects
+//!     total work + coordination overhead, not speedup (DESIGN.md).
+
+use std::sync::Arc;
+
+use linear_moe::coordinator::ddp::{run_ddp, DdpConfig};
+use linear_moe::coordinator::metrics::Table;
+use linear_moe::coordinator::pipeline::{simulate, Schedule};
+use linear_moe::data;
+use linear_moe::memcost::{self, ParallelCfg};
+use linear_moe::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    // Part 1: modeled memory, paper configs (seq 2048, batch 4, A0.3B-like)
+    let a0p3b = linear_moe::runtime::ModelConfig {
+        vocab: 151936, d_model: 1024, n_heads: 8, d_head: 128, n_layers: 12,
+        layout: "L".repeat(12), lsm: "gla".into(), chunk: 64,
+        n_experts: 64, top_k: 8, d_ffn: 896, capacity_factor: 1.0,
+    };
+    let mut t1 = Table::new(&["EP", "TP", "PP", "mem/GPU GiB (model)"]);
+    for (ep, tp, pp) in [(1, 1, 1), (8, 1, 1), (1, 8, 1), (1, 1, 8), (2, 2, 2)] {
+        let p = ParallelCfg { dp: 1, sp: 1, pp, tp, ep, dist_opt: false };
+        let gib = memcost::gib(memcost::train_bytes(&a0p3b, 4, 2048, &p, true));
+        t1.row(&[ep.to_string(), tp.to_string(), pp.to_string(),
+                 format!("{gib:.2}")]);
+    }
+    println!("\n=== Table 4 (bottom, part 1): modeled memory, A0.3B config ===");
+    t1.print();
+
+    // Part 2: measured time/iter on tiny artifacts.
+    let steps = std::env::var("BENCH_ITERS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(3usize);
+    let vocab = rt.manifest.variant("tiny_gla")?.config.vocab;
+    drop(rt);
+    let mut t2 = Table::new(&["scheme", "workers", "ms/iter", "comm MiB"]);
+    for dp in [1usize, 2, 4, 8] {
+        let bf: linear_moe::coordinator::ddp::BatchFn = Arc::new(move |idx, n| {
+            let mut lm = data::ZipfLm::new(vocab, idx as u64);
+            let b = data::batch_from_stream(&mut lm, 2, n);
+            (b.tokens, b.targets)
+        });
+        let t0 = std::time::Instant::now();
+        let rep = run_ddp(&DdpConfig {
+            artifacts_dir: "artifacts".into(), tag: "tiny_gla".into(),
+            batch: 2, seq: 128, dp, lr: 1e-3, steps, seed: 0,
+        }, bf)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+        t2.row(&[format!("DP (ZeRO-1)"), dp.to_string(), format!("{ms:.0}"),
+                 format!("{:.1}", (rep.traffic.0 + rep.traffic.1) as f64 / 1048576.0)]);
+    }
+    println!("\n=== Table 4 (bottom, part 2): measured DDP time/iter (tiny, incl. per-worker artifact compile in first lap) ===");
+    t2.print();
+
+    // Part 3: pipeline schedule simulation (bubble + peak memory)
+    let mut t3 = Table::new(&["schedule", "stages", "microbatches",
+                              "ticks (bubble proxy)", "peak live acts s0"]);
+    for (st, m) in [(2usize, 8usize), (4, 8), (8, 8)] {
+        for (name, k) in [("GPipe", Schedule::GPipe), ("1F1B", Schedule::OneF1B)] {
+            let r = simulate(k, st, m)?;
+            t3.row(&[name.to_string(), st.to_string(), m.to_string(),
+                     r.ticks.to_string(), r.peak_live[0].to_string()]);
+        }
+    }
+    println!("\n=== Table 4 (bottom, part 3): pipeline schedule ablation ===");
+    t3.print();
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Paper §2.2.4: variable-length batching -- right-padding vs packing the
+//! batch as one continuous sequence.  Reports wasted-token fraction and
+//! effective training throughput (real tokens / s) through the eval_loss
+//! artifact.
+
+use linear_moe::coordinator::metrics::Table;
+use linear_moe::data;
+use linear_moe::rng::Rng;
+use linear_moe::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::var("BENCH_ITERS").ok()
+        .and_then(|s| s.parse().ok()).unwrap_or(5);
+    let rt = Runtime::new("artifacts")?;
+    let exe = rt.load("eval_loss_tiny_gla_b2n128")?;
+    let params = rt.init_params("tiny_gla", 0)?;
+    let mut lm = data::ZipfLm::new(2048, 1);
+    let mut rng = Rng::new(2);
+    let mut table = Table::new(&["strategy", "real-token eff", "real tok/s"]);
+    for (name, packed) in [("right-padding", false), ("packed-continuous", true)] {
+        let mut real = 0usize;
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            let lens = data::sample_doc_lengths(&mut rng, 48, 40, 128);
+            let docs: Vec<Vec<i32>> = lens.iter().map(|&l| lm.document(l)).collect();
+            let b = if packed {
+                data::batch_packed(&docs, 2, 128).0
+            } else {
+                data::batch_padded(&docs, 2, 128, 0)
+            };
+            real += b.real_tokens;
+            let out = exe.run_bundled(&[&params], &[&b.tokens, &b.targets])?;
+            std::hint::black_box(out[1].item_f32()?);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        table.row(&[name.to_string(),
+                    format!("{:.2}", real as f64 / (iters * 2 * 128) as f64),
+                    format!("{:.0}", real as f64 / dt)]);
+    }
+    println!("\n=== §2.2.4: variable-length handling ===");
+    table.print();
+    Ok(())
+}

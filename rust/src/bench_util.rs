@@ -1,0 +1,43 @@
+//! Minimal bench harness (offline substitute for criterion): timed warmup
+//! + measured iterations, median/mean reporting, and paper-table printing
+//! via `coordinator::metrics::Table`.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Run `f` for `warmup` + `iters` iterations and time each measured one.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut laps = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        laps.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    laps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: laps.iter().sum::<f64>() / laps.len() as f64,
+        median_ms: laps[laps.len() / 2],
+        min_ms: laps[0],
+    }
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:40} {:4} iters  mean {:9.3} ms  median {:9.3} ms  min {:9.3} ms",
+            self.name, self.iters, self.mean_ms, self.median_ms, self.min_ms
+        );
+    }
+}

@@ -1,0 +1,363 @@
+//! In-process collective communication library.
+//!
+//! The paper's cluster is 8 GPUs over NCCL; here a "device" is a worker
+//! thread and the transport is shared memory, but the *algorithms* are the
+//! same: the LASP AllGather of d×d memory states (paper Alg. 1/2), the
+//! TP all-reduce decomposed as all-gather + reduce-scatter (paper §A.2),
+//! the EP all-to-all token exchange, and ring point-to-point for LASP-1.
+//! Per-handle traffic metering lets benches *measure* the paper's
+//! communication-volume claims instead of asserting them.
+//!
+//! Synchronization: a generation-counted exchange board (deposit slots +
+//! condvar).  All ranks must issue collectives in the same program order
+//! (standard SPMD contract).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Generic rendezvous board.
+// ---------------------------------------------------------------------------
+
+struct BoardState<T> {
+    gen: u64,
+    filled: usize,
+    drained: usize,
+    vals: Vec<Option<Arc<T>>>,
+}
+
+pub struct Exchange<T> {
+    state: Mutex<BoardState<T>>,
+    cv: Condvar,
+    world: usize,
+}
+
+impl<T> Exchange<T> {
+    pub fn new(world: usize) -> Self {
+        Exchange {
+            state: Mutex::new(BoardState {
+                gen: 0,
+                filled: 0,
+                drained: 0,
+                vals: (0..world).map(|_| None).collect(),
+            }),
+            cv: Condvar::new(),
+            world,
+        }
+    }
+
+    /// Deposit this rank's value; block until every rank has deposited;
+    /// return all values (rank order).  Reusable across rounds.
+    pub fn exchange(&self, rank: usize, val: T) -> Vec<Arc<T>> {
+        let mut st = self.state.lock().unwrap();
+        // Wait for our slot from the previous round to be fully drained.
+        while st.vals[rank].is_some() {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.vals[rank] = Some(Arc::new(val));
+        st.filled += 1;
+        let my_gen = st.gen;
+        if st.filled == self.world {
+            self.cv.notify_all();
+        }
+        while st.gen == my_gen && st.filled < self.world {
+            st = self.cv.wait(st).unwrap();
+        }
+        let out: Vec<Arc<T>> = st.vals.iter().map(|v| v.clone().unwrap()).collect();
+        st.drained += 1;
+        if st.drained == self.world {
+            for v in st.vals.iter_mut() {
+                *v = None;
+            }
+            st.filled = 0;
+            st.drained = 0;
+            st.gen += 1;
+            self.cv.notify_all();
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process group.
+// ---------------------------------------------------------------------------
+
+struct Shared {
+    board: Exchange<Tensor>,
+    board_multi: Exchange<Vec<Tensor>>,
+    /// logical bytes moved across the group (sum over ranks of bytes each
+    /// rank contributed to the wire), per op class
+    bytes_ag: AtomicU64,
+    bytes_rs: AtomicU64,
+    bytes_p2p: AtomicU64,
+    bytes_a2a: AtomicU64,
+}
+
+/// A communicator over `world` ranks.  Clone-free: call `handles()` once
+/// and move each `CommHandle` into its worker thread.
+pub struct Comm {
+    world: usize,
+    shared: Arc<Shared>,
+}
+
+pub struct CommHandle {
+    pub rank: usize,
+    pub world: usize,
+    shared: Arc<Shared>,
+    ring_tx: Sender<Tensor>,
+    ring_rx: Mutex<Receiver<Tensor>>,
+}
+
+impl Comm {
+    pub fn new(world: usize) -> (Comm, Vec<CommHandle>) {
+        let shared = Arc::new(Shared {
+            board: Exchange::new(world),
+            board_multi: Exchange::new(world),
+            bytes_ag: AtomicU64::new(0),
+            bytes_rs: AtomicU64::new(0),
+            bytes_p2p: AtomicU64::new(0),
+            bytes_a2a: AtomicU64::new(0),
+        });
+        // ring edges: rank i sends to (i+1) % world
+        let mut txs = Vec::with_capacity(world);
+        let mut rxs = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+        // handle[i] receives on channel i (fed by rank i-1) and sends on
+        // channel (i+1) % world.
+        let mut handles = Vec::with_capacity(world);
+        for rank in 0..world {
+            handles.push(CommHandle {
+                rank,
+                world,
+                shared: shared.clone(),
+                ring_tx: txs[(rank + 1) % world].clone(),
+                ring_rx: Mutex::new(rxs[rank].take().unwrap()),
+            });
+        }
+        (Comm { world, shared }, handles)
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// (all-gather, reduce-scatter, p2p, all-to-all) logical bytes so far.
+    pub fn traffic(&self) -> (u64, u64, u64, u64) {
+        (
+            self.shared.bytes_ag.load(Ordering::Relaxed),
+            self.shared.bytes_rs.load(Ordering::Relaxed),
+            self.shared.bytes_p2p.load(Ordering::Relaxed),
+            self.shared.bytes_a2a.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl CommHandle {
+    pub fn barrier(&self) {
+        self.shared.board.exchange(self.rank, Tensor::scalar_i32(0));
+    }
+
+    /// All-gather: returns every rank's tensor in rank order.  This is the
+    /// LASP-2 primitive (paper §2.2.1): one collective on the memory state.
+    pub fn all_gather(&self, local: Tensor) -> Vec<Arc<Tensor>> {
+        self.shared
+            .bytes_ag
+            .fetch_add(local.size_bytes() as u64, Ordering::Relaxed);
+        self.shared.board.exchange(self.rank, local)
+    }
+
+    /// Reduce-scatter (sum): every rank contributes a full-length tensor,
+    /// receives the sum of its 1/world shard.  Length must divide evenly.
+    pub fn reduce_scatter_sum(&self, local: Tensor) -> Result<Tensor> {
+        let n = local.numel();
+        anyhow::ensure!(n % self.world == 0,
+                        "reduce_scatter: {n} not divisible by world {}", self.world);
+        self.shared
+            .bytes_rs
+            .fetch_add(local.size_bytes() as u64, Ordering::Relaxed);
+        let shard = n / self.world;
+        let all = self.shared.board.exchange(self.rank, local);
+        let lo = self.rank * shard;
+        let mut out = vec![0f32; shard];
+        for t in &all {
+            let v = t.as_f32()?;
+            for (o, x) in out.iter_mut().zip(&v[lo..lo + shard]) {
+                *o += *x;
+            }
+        }
+        Ok(Tensor::f32(&[shard], out))
+    }
+
+    /// All-reduce (sum), decomposed as all-gather + local reduction --
+    /// functionally the AG+RS decomposition of paper §A.2.
+    pub fn all_reduce_sum(&self, local: Tensor) -> Result<Tensor> {
+        let shape = local.shape.clone();
+        let all = self.all_gather(local);
+        let mut out = vec![0f32; shape.iter().product()];
+        for t in &all {
+            let v = t.as_f32()?;
+            for (o, x) in out.iter_mut().zip(v) {
+                *o += *x;
+            }
+        }
+        Ok(Tensor::f32(&shape, out))
+    }
+
+    /// Broadcast from `root`.
+    pub fn broadcast(&self, root: usize, local: Tensor) -> Arc<Tensor> {
+        let all = self.shared.board.exchange(self.rank, local);
+        all[root].clone()
+    }
+
+    /// Ring point-to-point: send to (rank+1) % world, receive from
+    /// (rank-1) % world.  This is LASP-1's communication pattern.
+    pub fn ring_shift(&self, send: Tensor) -> Result<Tensor> {
+        self.shared
+            .bytes_p2p
+            .fetch_add(send.size_bytes() as u64, Ordering::Relaxed);
+        self.ring_tx.send(send)?;
+        Ok(self.ring_rx.lock().unwrap().recv()?)
+    }
+
+    /// Asynchronous ring send to (rank+1) % world (used by the LASP-1
+    /// sequential prefix chain, where only a neighbour pair synchronizes).
+    pub fn ring_send(&self, send: Tensor) -> Result<()> {
+        self.shared
+            .bytes_p2p
+            .fetch_add(send.size_bytes() as u64, Ordering::Relaxed);
+        self.ring_tx.send(send)?;
+        Ok(())
+    }
+
+    /// Blocking ring receive from (rank-1) % world.
+    pub fn ring_recv(&self) -> Result<Tensor> {
+        Ok(self.ring_rx.lock().unwrap().recv()?)
+    }
+
+    /// All-to-all: `parts[d]` goes to rank d; returns what every rank sent
+    /// to us (rank order).  The EP token-exchange primitive.
+    pub fn all_to_all(&self, parts: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(parts.len() == self.world);
+        let bytes: usize = parts.iter().map(|t| t.size_bytes()).sum();
+        self.shared
+            .bytes_a2a
+            .fetch_add(bytes as u64, Ordering::Relaxed);
+        let all = self.shared.board_multi.exchange(self.rank, parts);
+        Ok(all.iter().map(|v| v[self.rank].clone()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_world<F, R>(world: usize, f: F) -> Vec<R>
+    where
+        F: Fn(CommHandle) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let (_comm, handles) = Comm::new(world);
+        let f = Arc::new(f);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                let f = f.clone();
+                thread::spawn(move || f(h))
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_gather_orders_by_rank() {
+        let outs = run_world(4, |h| {
+            let t = Tensor::f32(&[2], vec![h.rank as f32, 1.0]);
+            let all = h.all_gather(t);
+            all.iter().map(|t| t.as_f32().unwrap()[0]).collect::<Vec<_>>()
+        });
+        for o in outs {
+            assert_eq!(o, vec![0.0, 1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        let outs = run_world(3, |h| {
+            let t = Tensor::f32(&[3], vec![1.0, h.rank as f32, 2.0]);
+            h.all_reduce_sum(t).unwrap().as_f32().unwrap().to_vec()
+        });
+        for o in outs {
+            assert_eq!(o, vec![3.0, 3.0, 6.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_shards() {
+        let outs = run_world(2, |h| {
+            let t = Tensor::f32(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+            let s = h.reduce_scatter_sum(t).unwrap();
+            (h.rank, s.as_f32().unwrap().to_vec())
+        });
+        for (rank, o) in outs {
+            if rank == 0 {
+                assert_eq!(o, vec![2.0, 4.0]);
+            } else {
+                assert_eq!(o, vec![6.0, 8.0]);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_shift_rotates() {
+        let outs = run_world(4, |h| {
+            let t = Tensor::scalar_f32(h.rank as f32);
+            let r = h.ring_shift(t).unwrap();
+            (h.rank, r.item_f32().unwrap())
+        });
+        for (rank, v) in outs {
+            assert_eq!(v as usize, (rank + 3) % 4);
+        }
+    }
+
+    #[test]
+    fn all_to_all_transposes() {
+        let outs = run_world(3, |h| {
+            let parts = (0..3)
+                .map(|d| Tensor::scalar_f32((h.rank * 10 + d) as f32))
+                .collect();
+            let got = h.all_to_all(parts).unwrap();
+            (h.rank, got.iter().map(|t| t.item_f32().unwrap()).collect::<Vec<_>>())
+        });
+        for (rank, v) in outs {
+            // from rank s we receive s*10 + rank
+            let want: Vec<f32> = (0..3).map(|s| (s * 10 + rank) as f32).collect();
+            assert_eq!(v, want);
+        }
+    }
+
+    #[test]
+    fn board_reusable_many_rounds() {
+        let outs = run_world(4, |h| {
+            let mut acc = 0.0;
+            for round in 0..50 {
+                let t = Tensor::scalar_f32((h.rank + round) as f32);
+                acc += h.all_reduce_sum(t).unwrap().item_f32().unwrap();
+            }
+            acc
+        });
+        let want: f32 = (0..50).map(|r| (0 + 1 + 2 + 3 + 4 * r) as f32).sum();
+        for o in outs {
+            assert_eq!(o, want);
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Binary checkpointing for parameter / optimizer-state bundles.
+//!
+//! Format (little-endian):
+//!   magic "LMOE" | version u32 | n_tensors u32 |
+//!   per tensor: dtype u8 (0=f32, 1=i32) | ndim u32 | dims u64* | data
+//!
+//! Deterministic, self-describing, resumable mid-run; the `train`
+//! subcommand writes one every --save-every steps.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{Bundle, Data, Tensor};
+
+const MAGIC: &[u8; 4] = b"LMOE";
+const VERSION: u32 = 1;
+
+pub fn save(path: impl AsRef<Path>, bundles: &[(&str, &Bundle)]) -> Result<()> {
+    let f = File::create(path.as_ref())
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(bundles.len() as u32).to_le_bytes())?;
+    for (name, b) in bundles {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(b.tensors.len() as u32).to_le_bytes())?;
+        for t in &b.tensors {
+            let dtype: u8 = if t.is_f32() { 0 } else { 1 };
+            w.write_all(&[dtype])?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match &t.data {
+                Data::F32(v) => {
+                    for x in v {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                Data::I32(v) => {
+                    for x in v {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, Bundle)>> {
+    let f = File::open(path.as_ref())
+        .with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a Linear-MoE checkpoint");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let n_bundles = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(n_bundles);
+    for _ in 0..n_bundles {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let n_tensors = read_u32(&mut r)? as usize;
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let mut dtype = [0u8; 1];
+            r.read_exact(&mut dtype)?;
+            let ndim = read_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                r.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut raw = vec![0u8; numel * 4];
+            r.read_exact(&mut raw)?;
+            let t = match dtype[0] {
+                0 => Tensor::f32(
+                    &shape,
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                1 => Tensor::i32(
+                    &shape,
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                ),
+                d => bail!("bad dtype tag {d}"),
+            };
+            tensors.push(t);
+        }
+        out.push((String::from_utf8(name)?, Bundle::new(tensors)));
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("lmoe_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        let params = Bundle::new(vec![
+            Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]),
+            Tensor::i32(&[2], vec![7, 8]),
+        ]);
+        let opt = Bundle::new(vec![Tensor::f32(&[4], vec![0.1, 0.2, 0.3, 0.4])]);
+        save(&path, &[("params", &params), ("opt_m", &opt)]).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        assert_eq!(loaded[0].0, "params");
+        assert_eq!(loaded[0].1.tensors, params.tensors);
+        assert_eq!(loaded[1].1.tensors, opt.tensors);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("lmoe_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

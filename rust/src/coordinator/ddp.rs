@@ -1,0 +1,223 @@
+//! Data-parallel + distributed-optimizer training (paper §2.2.3).
+//!
+//! Each DP worker is a thread owning its own PJRT runtime and a replica of
+//! the parameters.  Per step:
+//!   1. every worker runs the `fwd_bwd_*` artifact on its micro-batch,
+//!   2. gradients are all-reduced (sum / dp) across the DP group,
+//!   3. ZeRO-1: each worker Adam-updates its 1/dp shard of the flat
+//!      parameter vector, then shards are all-gathered back.
+//!
+//! Equivalence to single-worker training on the concatenated batch is an
+//! integration test (rust/tests/distributed.rs), up to the loss-mean vs
+//! grad-mean ordering which is exact here because every micro-batch has
+//! the same token count.
+
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::Result;
+
+use crate::collectives::{Comm, CommHandle};
+use crate::coordinator::optimizer::DistributedOptimizer;
+use crate::runtime::Runtime;
+use crate::tensor::{Bundle, Tensor};
+
+pub struct DdpConfig {
+    pub artifacts_dir: String,
+    pub tag: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub dp: usize,
+    pub lr: f32,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct DdpReport {
+    pub losses: Vec<f32>,
+    /// final params (from rank 0)
+    pub params: Option<Bundle>,
+    /// (all-gather bytes, reduce-scatter bytes)
+    pub traffic: (u64, u64),
+    pub tokens_per_sec: f64,
+}
+
+/// Batches are produced by a caller-supplied generator so tests can feed
+/// identical data to DDP and single-worker baselines.
+pub type BatchFn = Arc<dyn Fn(usize, usize) -> (Tensor, Tensor) + Send + Sync>;
+
+pub fn run_ddp(cfg: &DdpConfig, batch_fn: BatchFn) -> Result<DdpReport> {
+    let (comm, handles) = Comm::new(cfg.dp);
+    let mut joins = Vec::new();
+    for (rank, h) in handles.into_iter().enumerate() {
+        let cfg_dir = cfg.artifacts_dir.clone();
+        let tag = cfg.tag.clone();
+        let (b, n, lr, steps, dp) = (cfg.batch, cfg.seq, cfg.lr, cfg.steps, cfg.dp);
+        let bf = batch_fn.clone();
+        joins.push(thread::spawn(move || -> Result<(Vec<f32>, Option<Bundle>)> {
+            worker(rank, dp, h, &cfg_dir, &tag, b, n, lr, steps, bf)
+        }));
+    }
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::new();
+    let mut params = None;
+    for (rank, j) in joins.into_iter().enumerate() {
+        let (l, p) = j.join().expect("worker panicked")?;
+        if rank == 0 {
+            losses = l;
+            params = p;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let (ag, rs, _, _) = comm.traffic();
+    Ok(DdpReport {
+        losses,
+        params,
+        traffic: (ag, rs),
+        tokens_per_sec: (cfg.batch * cfg.seq * cfg.steps) as f64 / dt,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    rank: usize,
+    dp: usize,
+    comm: CommHandle,
+    artifacts_dir: &str,
+    tag: &str,
+    batch: usize,
+    seq: usize,
+    lr: f32,
+    steps: usize,
+    batch_fn: BatchFn,
+) -> Result<(Vec<f32>, Option<Bundle>)> {
+    // PJRT wrappers are not Send: each worker builds its own runtime.
+    let rt = Runtime::new(artifacts_dir)?;
+    let exe = rt.load(&format!("fwd_bwd_{tag}_b{batch}n{seq}"))?;
+    let mut params = rt.init_params(tag, 0)?; // same seed => same replica
+    let n_params = params.tensors.len();
+    let mut opt = DistributedOptimizer::new(params.numel(), dp, rank);
+
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        // global batch index -> this worker's micro-batch
+        let (tokens, targets) = batch_fn(step * dp + rank, seq);
+        let out = exe.run_bundled(&[&params], &[&tokens, &targets])?;
+        let loss = out[0].item_f32()?;
+        let mut grads = Bundle::new(out[2..2 + n_params].to_vec());
+
+        // grad all-reduce (mean) over DP
+        let (flat_g, _) = grads.flatten_f32()?;
+        let reduced = comm.all_reduce_sum(Tensor::f32(&[flat_g.len()], flat_g))?;
+        let mut mean_g = reduced.as_f32()?.to_vec();
+        for g in &mut mean_g {
+            *g /= dp as f32;
+        }
+        grads.unflatten_f32(&mean_g)?;
+
+        // loss mean across ranks (for reporting)
+        let loss_mean = comm
+            .all_reduce_sum(Tensor::scalar_f32(loss))?
+            .item_f32()?
+            / dp as f32;
+        losses.push(loss_mean);
+
+        opt.step_and_allgather(&comm, &mut params, &grads, lr)?;
+        let _ = step;
+    }
+    let out_params = if rank == 0 { Some(params) } else { None };
+    Ok((losses, out_params))
+}
+
+/// Single-worker trainer over the fused `train_step_*` artifact (fwd +
+/// bwd + Adam in one HLO launch — one PJRT round-trip per step; see
+/// EXPERIMENTS.md §Perf).  Adam state lives inside the artifact I/O.
+pub fn run_fused(
+    artifacts_dir: &str,
+    tag: &str,
+    batch: usize,
+    seq: usize,
+    lr: f32,
+    steps: usize,
+    batch_fn: BatchFn,
+    log_every: usize,
+) -> Result<DdpReport> {
+    let rt = Runtime::new(artifacts_dir)?;
+    let exe = rt.load(&format!("train_step_{tag}_b{batch}n{seq}"))?;
+    let mut params = rt.init_params(tag, 0)?;
+    let mut m = params.zeros_like();
+    let mut v = params.zeros_like();
+    let np = params.tensors.len();
+    let lr_t = Tensor::scalar_f32(lr);
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (tokens, targets) = batch_fn(step, seq);
+        let step_t = Tensor::scalar_i32(step as i32 + 1);
+        let out = exe.run_bundled(&[&params, &m, &v],
+                                  &[&step_t, &lr_t, &tokens, &targets])?;
+        let loss = out[0].item_f32()?;
+        losses.push(loss);
+        params = Bundle::new(out[2..2 + np].to_vec());
+        m = Bundle::new(out[2 + np..2 + 2 * np].to_vec());
+        v = Bundle::new(out[2 + 2 * np..2 + 3 * np].to_vec());
+        if log_every > 0 && step % log_every == 0 {
+            eprintln!("  [{tag}] step {step:5}  loss {loss:.4}");
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    Ok(DdpReport {
+        losses,
+        params: Some(params),
+        traffic: (0, 0),
+        tokens_per_sec: (batch * seq * steps) as f64 / dt,
+    })
+}
+
+/// Single-worker reference trainer over the same fwd_bwd artifact +
+/// host-side Adam (the comparison target for the DDP equivalence test and
+/// the fallback when dp == 1).
+pub fn run_single(
+    artifacts_dir: &str,
+    tag: &str,
+    batch: usize,
+    seq: usize,
+    lr: f32,
+    steps: usize,
+    batch_fn: BatchFn,
+    grad_accum: usize,
+) -> Result<DdpReport> {
+    let rt = Runtime::new(artifacts_dir)?;
+    let exe = rt.load(&format!("fwd_bwd_{tag}_b{batch}n{seq}"))?;
+    let mut params = rt.init_params(tag, 0)?;
+    let n_params = params.tensors.len();
+    let mut opt = crate::coordinator::optimizer::LocalAdam::new(params.numel());
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let mut acc: Option<Bundle> = None;
+        let mut loss_acc = 0.0f32;
+        for micro in 0..grad_accum {
+            let (tokens, targets) = batch_fn(step * grad_accum + micro, seq);
+            let out = exe.run_bundled(&[&params], &[&tokens, &targets])?;
+            loss_acc += out[0].item_f32()?;
+            let grads = Bundle::new(out[2..2 + n_params].to_vec());
+            match &mut acc {
+                None => acc = Some(grads),
+                Some(a) => a.add_assign(&grads)?,
+            }
+        }
+        let mut grads = acc.unwrap();
+        grads.scale(1.0 / grad_accum as f32)?;
+        losses.push(loss_acc / grad_accum as f32);
+        opt.step(&mut params, &grads, lr)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    Ok(DdpReport {
+        losses,
+        params: Some(params),
+        traffic: (0, 0),
+        tokens_per_sec: (batch * seq * steps * grad_accum) as f64 / dt,
+    })
+}

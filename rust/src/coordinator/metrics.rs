@@ -1,0 +1,210 @@
+//! Training metrics: loss-curve recording (Fig. 6/7), throughput meters
+//! (Table 3 / Fig. 4), and simple CSV output for plotting.
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+#[derive(Clone, Debug, Default)]
+pub struct LossCurve {
+    pub label: String,
+    pub steps: Vec<usize>,
+    pub losses: Vec<f32>,
+}
+
+impl LossCurve {
+    pub fn new(label: &str) -> Self {
+        LossCurve { label: label.to_string(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, step: usize, loss: f32) {
+        self.steps.push(step);
+        self.losses.push(loss);
+    }
+
+    /// Mean loss over the last `k` recorded points (curve smoothing).
+    pub fn tail_mean(&self, k: usize) -> f32 {
+        let n = self.losses.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let k = k.min(n);
+        self.losses[n - k..].iter().sum::<f32>() / k as f32
+    }
+}
+
+/// Write curves as a wide CSV: step, <label1>, <label2>, ...
+/// Curves may have different lengths; missing cells are blank.
+pub fn write_csv(path: impl AsRef<Path>, curves: &[&LossCurve]) -> Result<()> {
+    let mut out = String::new();
+    write!(out, "step")?;
+    for c in curves {
+        write!(out, ",{}", c.label)?;
+    }
+    writeln!(out)?;
+    let max_len = curves.iter().map(|c| c.steps.len()).max().unwrap_or(0);
+    for i in 0..max_len {
+        let step = curves
+            .iter()
+            .find(|c| i < c.steps.len())
+            .map(|c| c.steps[i])
+            .unwrap_or(i);
+        write!(out, "{step}")?;
+        for c in curves {
+            if i < c.losses.len() {
+                write!(out, ",{:.5}", c.losses[i])?;
+            } else {
+                write!(out, ",")?;
+            }
+        }
+        writeln!(out)?;
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Throughput meter: tokens/sec with warmup exclusion (first `warmup`
+/// laps are discarded -- artifact compilation and cache warmup).
+pub struct Throughput {
+    warmup: usize,
+    laps: Vec<f64>,
+    tokens_per_lap: usize,
+    t0: Option<Instant>,
+}
+
+impl Throughput {
+    pub fn new(tokens_per_lap: usize, warmup: usize) -> Self {
+        Throughput { warmup, laps: Vec::new(), tokens_per_lap, t0: None }
+    }
+
+    pub fn start(&mut self) {
+        self.t0 = Some(Instant::now());
+    }
+
+    pub fn lap(&mut self) {
+        if let Some(t0) = self.t0.take() {
+            self.laps.push(t0.elapsed().as_secs_f64());
+        }
+        self.t0 = Some(Instant::now());
+    }
+
+    pub fn measured_laps(&self) -> &[f64] {
+        &self.laps[self.warmup.min(self.laps.len())..]
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let laps = self.measured_laps();
+        if laps.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = laps.iter().sum();
+        (laps.len() * self.tokens_per_lap) as f64 / total
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let laps = self.measured_laps();
+        if laps.is_empty() {
+            return 0.0;
+        }
+        laps.iter().sum::<f64>() / laps.len() as f64 * 1e3
+    }
+
+    pub fn median_ms(&self) -> f64 {
+        let mut laps = self.measured_laps().to_vec();
+        if laps.is_empty() {
+            return 0.0;
+        }
+        laps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        laps[laps.len() / 2] * 1e3
+    }
+}
+
+/// Fixed-width table printer for the bench harnesses (paper-table shaped
+/// output).
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:>w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_curve_tail_mean() {
+        let mut c = LossCurve::new("x");
+        for (i, l) in [5.0, 4.0, 3.0, 2.0].iter().enumerate() {
+            c.push(i, *l);
+        }
+        assert!((c.tail_mean(2) - 2.5).abs() < 1e-6);
+        assert!((c.tail_mean(100) - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_output() {
+        let mut a = LossCurve::new("a");
+        a.push(0, 1.0);
+        a.push(1, 0.5);
+        let mut b = LossCurve::new("b");
+        b.push(0, 2.0);
+        let dir = std::env::temp_dir().join("lmoe_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.csv");
+        write_csv(&p, &[&a, &b]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("step,a,b\n"));
+        assert!(s.contains("0,1.00000,2.00000"));
+        assert!(s.contains("1,0.50000,"));
+    }
+
+    #[test]
+    fn throughput_excludes_warmup() {
+        let mut t = Throughput::new(100, 1);
+        t.start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        t.lap(); // warmup lap
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        t.lap();
+        assert_eq!(t.measured_laps().len(), 1);
+        assert!(t.tokens_per_sec() > 0.0);
+    }
+}

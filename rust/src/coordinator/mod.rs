@@ -1,0 +1,19 @@
+//! The Linear-MoE Training subsystem (paper §2.2): everything the paper
+//! attributes to the training system lives here, composed from the
+//! substrates (collectives, topology, runtime) below it.
+//!
+//!  - [`optimizer`]: Adam + ZeRO-1 distributed optimizer
+//!  - [`ddp`]: data-parallel training over worker threads
+//!  - [`sp`]: LASP-1/LASP-2 sequence parallelism + hybrid-model SP
+//!  - [`pipeline`]: GPipe / 1F1B schedules + per-layer stage execution
+//!  - [`moe_ep`]: expert-parallel token dispatch + MoE exec strategies
+//!  - [`checkpoint`]: parameter/optimizer-state save & load
+//!  - [`metrics`]: throughput / loss-curve recording
+
+pub mod checkpoint;
+pub mod ddp;
+pub mod metrics;
+pub mod moe_ep;
+pub mod optimizer;
+pub mod pipeline;
+pub mod sp;

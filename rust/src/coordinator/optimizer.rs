@@ -1,0 +1,218 @@
+//! Optimizer: Adam with bias correction, in two interchangeable backends,
+//! plus the ZeRO-1 **distributed optimizer** (Megatron-Core's
+//! "Distributed Optimizer", paper §2.2.3): each DP rank owns 1/dp of the
+//! flat parameter vector, updates only its shard, then shards are
+//! all-gathered back into full parameters.
+//!
+//! Backends:
+//!  - `RustAdam`: scalar loop on host buffers (no PJRT round-trip; the
+//!    default — profiling showed the HLO round-trip dominates at small
+//!    bucket sizes, see EXPERIMENTS.md §Perf).
+//!  - `HloAdam`: executes the `adam_bucket_{n}` artifacts; numerically
+//!    identical (tested), kept as the cross-check and the path a real
+//!    accelerator deployment would use.
+
+use anyhow::Result;
+
+use crate::collectives::CommHandle;
+use crate::runtime::Runtime;
+use crate::tensor::{Bundle, Tensor};
+
+pub const B1: f32 = 0.9;
+pub const B2: f32 = 0.95;
+pub const EPS: f32 = 1e-8;
+
+/// Flat Adam state over `n` parameters.
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i32,
+}
+
+impl AdamState {
+    pub fn new(n: usize) -> Self {
+        AdamState { m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+}
+
+/// In-place Adam on a flat slice (one shard).  `step` is 1-based.
+pub fn adam_step_flat(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    step: i32,
+    lr: f32,
+) {
+    let bc1 = 1.0 - B1.powi(step);
+    let bc2 = 1.0 - B2.powi(step);
+    for i in 0..p.len() {
+        m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+        v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] -= lr * mhat / (vhat.sqrt() + EPS);
+    }
+}
+
+/// HLO-backed Adam over fixed-size buckets (the `adam_bucket_*` artifacts).
+pub struct HloAdam {
+    bucket: usize,
+    exe: std::rc::Rc<crate::runtime::Executable>,
+}
+
+impl HloAdam {
+    pub fn new(rt: &Runtime, bucket: usize) -> Result<Self> {
+        Ok(HloAdam { bucket, exe: rt.load(&format!("adam_bucket_{bucket}"))? })
+    }
+
+    /// Apply Adam to a flat vector by slicing it into buckets (the last
+    /// bucket is zero-padded; padding lanes carry zero grads so they stay
+    /// zero).
+    pub fn step_flat(
+        &self,
+        p: &mut Vec<f32>,
+        g: &[f32],
+        m: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        step: i32,
+        lr: f32,
+    ) -> Result<()> {
+        let n = p.len();
+        let bk = self.bucket;
+        let step_t = Tensor::scalar_i32(step);
+        let lr_t = Tensor::scalar_f32(lr);
+        let mut off = 0;
+        while off < n {
+            let len = bk.min(n - off);
+            let pad = bk - len;
+            let mk = |src: &[f32]| {
+                let mut buf = src[off..off + len].to_vec();
+                buf.resize(len + pad, 0.0);
+                Tensor::f32(&[bk], buf)
+            };
+            let out = self.exe.run(&[&mk(p), &mk(g), &mk(m), &mk(v),
+                                     &step_t, &lr_t])?;
+            p[off..off + len].copy_from_slice(&out[0].as_f32()?[..len]);
+            m[off..off + len].copy_from_slice(&out[1].as_f32()?[..len]);
+            v[off..off + len].copy_from_slice(&out[2].as_f32()?[..len]);
+            off += len;
+        }
+        Ok(())
+    }
+}
+
+/// ZeRO-1 distributed optimizer: rank owns `[lo, hi)` of the padded flat
+/// parameter vector.  `step_and_allgather` performs the local Adam update
+/// and reassembles full params via the DP group's all-gather.
+pub struct DistributedOptimizer {
+    pub world: usize,
+    pub rank_in_dp: usize,
+    pub shard: usize,
+    pub padded: usize,
+    state: AdamState,
+}
+
+impl DistributedOptimizer {
+    pub fn new(total_params: usize, dp_world: usize, rank_in_dp: usize) -> Self {
+        let shard = total_params.div_ceil(dp_world);
+        DistributedOptimizer {
+            world: dp_world,
+            rank_in_dp,
+            shard,
+            padded: shard * dp_world,
+            state: AdamState::new(shard),
+        }
+    }
+
+    /// Bytes of optimizer state held by this rank (memcost cross-check).
+    pub fn state_bytes(&self) -> usize {
+        2 * self.shard * 4
+    }
+
+    /// One distributed step: update the local shard from the (already
+    /// all-reduced) gradient, then all-gather shards into full params.
+    pub fn step_and_allgather(
+        &mut self,
+        comm: &CommHandle,
+        params: &mut Bundle,
+        grads: &Bundle,
+        lr: f32,
+    ) -> Result<()> {
+        let (mut flat_p, _) = params.flatten_f32()?;
+        let (mut flat_g, _) = grads.flatten_f32()?;
+        flat_p.resize(self.padded, 0.0);
+        flat_g.resize(self.padded, 0.0);
+        let lo = self.rank_in_dp * self.shard;
+        let hi = lo + self.shard;
+        self.state.step += 1;
+        adam_step_flat(
+            &mut flat_p[lo..hi],
+            &flat_g[lo..hi],
+            &mut self.state.m,
+            &mut self.state.v,
+            self.state.step,
+            lr,
+        );
+        // All-gather updated shards (rank order) into the full vector.
+        let local = Tensor::f32(&[self.shard], flat_p[lo..hi].to_vec());
+        let all = comm.all_gather(local);
+        let mut full = Vec::with_capacity(self.padded);
+        for t in &all {
+            full.extend_from_slice(t.as_f32()?);
+        }
+        full.truncate(params.numel());
+        params.unflatten_f32(&full)?;
+        Ok(())
+    }
+}
+
+/// Single-worker convenience: full (non-sharded) Rust Adam over a Bundle.
+pub struct LocalAdam {
+    state: AdamState,
+}
+
+impl LocalAdam {
+    pub fn new(n: usize) -> Self {
+        LocalAdam { state: AdamState::new(n) }
+    }
+
+    pub fn step(&mut self, params: &mut Bundle, grads: &Bundle, lr: f32) -> Result<()> {
+        let (mut p, _) = params.flatten_f32()?;
+        let (g, _) = grads.flatten_f32()?;
+        self.state.step += 1;
+        adam_step_flat(&mut p, &g, &mut self.state.m, &mut self.state.v,
+                       self.state.step, lr);
+        params.unflatten_f32(&p)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_matches_closed_form_first_step() {
+        let mut p = vec![1.0f32, -2.0];
+        let g = vec![0.5f32, -0.25];
+        let mut m = vec![0.0; 2];
+        let mut v = vec![0.0; 2];
+        adam_step_flat(&mut p, &g, &mut m, &mut v, 1, 0.1);
+        // step 1: mhat = g, vhat = g^2  =>  p -= lr * sign-ish(g)
+        for (i, &gi) in g.iter().enumerate() {
+            let want = [1.0f32, -2.0][i] - 0.1 * gi / (gi.abs() + EPS);
+            assert!((p[i] - want).abs() < 1e-5, "{} vs {}", p[i], want);
+        }
+    }
+
+    #[test]
+    fn zero_grad_is_identity() {
+        let mut p = vec![3.0f32; 8];
+        let g = vec![0.0f32; 8];
+        let mut m = vec![0.0; 8];
+        let mut v = vec![0.0; 8];
+        adam_step_flat(&mut p, &g, &mut m, &mut v, 1, 0.1);
+        assert!(p.iter().all(|&x| (x - 3.0).abs() < 1e-7));
+    }
+}

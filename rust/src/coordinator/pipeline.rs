@@ -1,0 +1,282 @@
+//! Pipeline parallelism (paper §2.2.3, "PP ... operates on complete
+//! Linear-MoE blocks").
+//!
+//! The model is cut into `stages` contiguous layer groups; micro-batches
+//! flow through per-layer `block_*`/`embed_*`/`head_*` artifacts with
+//! Megatron-style activation recomputation (the `*_bwd` artifacts re-run
+//! the forward internally, so only activations / activation-grads cross
+//! stage boundaries).
+//!
+//! Two schedules with a hazard-checked simulator:
+//!  - GPipe: all micro-batch forwards, then all backwards (peak activation
+//!    memory grows with #micro-batches),
+//!  - 1F1B: warmup forwards then alternating fwd/bwd (peak is bounded by
+//!    #stages) -- the ablation Table 4 (bottom) exercises.
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::tensor::{Bundle, Tensor};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Fwd(usize),
+    Bwd(usize),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    GPipe,
+    OneF1B,
+}
+
+/// Per-stage op sequence for `m` micro-batches.
+pub fn schedule_ops(kind: Schedule, stage: usize, stages: usize, m: usize) -> Vec<Op> {
+    match kind {
+        Schedule::GPipe => (0..m)
+            .map(Op::Fwd)
+            .chain((0..m).map(Op::Bwd))
+            .collect(),
+        Schedule::OneF1B => {
+            // warmup = min(stages - stage, m) forwards, then 1F1B, then
+            // drain remaining backwards.
+            let warmup = (stages - stage).min(m);
+            let mut ops = Vec::with_capacity(2 * m);
+            let mut f = 0usize;
+            let mut b = 0usize;
+            for _ in 0..warmup {
+                ops.push(Op::Fwd(f));
+                f += 1;
+            }
+            while f < m {
+                ops.push(Op::Bwd(b));
+                b += 1;
+                ops.push(Op::Fwd(f));
+                f += 1;
+            }
+            while b < m {
+                ops.push(Op::Bwd(b));
+                b += 1;
+            }
+            ops
+        }
+    }
+}
+
+/// Validate a full-pipeline schedule against data hazards and report the
+/// peak number of in-flight activations per stage (the memory proxy).
+/// Fwd(mb)@s needs Fwd(mb)@(s-1) done; Bwd(mb)@s needs Bwd(mb)@(s+1) and
+/// Fwd(mb)@s done.
+pub fn simulate(kind: Schedule, stages: usize, m: usize) -> Result<SimReport> {
+    let ops: Vec<Vec<Op>> = (0..stages)
+        .map(|s| schedule_ops(kind, s, stages, m))
+        .collect();
+    let mut idx = vec![0usize; stages];
+    let mut fwd_done = vec![vec![false; m]; stages];
+    let mut bwd_done = vec![vec![false; m]; stages];
+    let mut live = vec![0usize; stages];
+    let mut peak = vec![0usize; stages];
+    let mut ticks = 0usize;
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for s in 0..stages {
+            if idx[s] >= ops[s].len() {
+                continue;
+            }
+            all_done = false;
+            let op = ops[s][idx[s]];
+            let ready = match op {
+                Op::Fwd(mb) => s == 0 || fwd_done[s - 1][mb],
+                Op::Bwd(mb) => {
+                    fwd_done[s][mb] && (s == stages - 1 || bwd_done[s + 1][mb])
+                }
+            };
+            if ready {
+                match op {
+                    Op::Fwd(mb) => {
+                        fwd_done[s][mb] = true;
+                        live[s] += 1;
+                        peak[s] = peak[s].max(live[s]);
+                    }
+                    Op::Bwd(mb) => {
+                        bwd_done[s][mb] = true;
+                        live[s] -= 1;
+                    }
+                }
+                idx[s] += 1;
+                progressed = true;
+            }
+        }
+        if all_done {
+            break;
+        }
+        anyhow::ensure!(progressed, "schedule deadlocked (hazard)");
+        ticks += 1;
+    }
+    Ok(SimReport { peak_live: peak, ticks })
+}
+
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// peak in-flight fwd activations per stage
+    pub peak_live: Vec<usize>,
+    pub ticks: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Single-process pipeline executor (correctness path): runs all stages in
+// one thread, honoring the schedule order, over the per-layer artifacts.
+// The multi-worker wall-clock bench drives the same artifacts from
+// separate stage threads (see benches/table4_parallel.rs).
+// ---------------------------------------------------------------------------
+
+pub struct PipelineModel {
+    pub tag: String,
+    /// layer kinds, e.g. "LLLN"
+    pub layout: Vec<char>,
+    pub mb: usize,
+    pub seq: usize,
+    embed: std::rc::Rc<crate::runtime::Executable>,
+    embed_bwd: std::rc::Rc<crate::runtime::Executable>,
+    head_bwd: std::rc::Rc<crate::runtime::Executable>,
+    block_fwd_l: std::rc::Rc<crate::runtime::Executable>,
+    block_bwd_l: std::rc::Rc<crate::runtime::Executable>,
+    block_fwd_n: Option<std::rc::Rc<crate::runtime::Executable>>,
+    block_bwd_n: Option<std::rc::Rc<crate::runtime::Executable>>,
+}
+
+impl PipelineModel {
+    pub fn new(rt: &Runtime, tag: &str, layout: &str, mb: usize, seq: usize) -> Result<Self> {
+        let sfx = format!("{tag}_mb{mb}n{seq}");
+        let attn_tag = tag.rsplit_once('_').map(|(p, _)| format!("{p}_attn"));
+        let need_n = layout.contains('N');
+        Ok(PipelineModel {
+            tag: tag.to_string(),
+            layout: layout.chars().collect(),
+            mb,
+            seq,
+            embed: rt.load(&format!("embed_{sfx}"))?,
+            embed_bwd: rt.load(&format!("embed_bwd_{sfx}"))?,
+            head_bwd: rt.load(&format!("head_bwd_{sfx}"))?,
+            block_fwd_l: rt.load(&format!("block_L_{sfx}"))?,
+            block_bwd_l: rt.load(&format!("block_L_bwd_{sfx}"))?,
+            block_fwd_n: if need_n {
+                Some(rt.load(&format!(
+                    "block_N_{}_mb{mb}n{seq}",
+                    attn_tag.clone().unwrap()
+                ))?)
+            } else {
+                None
+            },
+            block_bwd_n: if need_n {
+                Some(rt.load(&format!(
+                    "block_N_bwd_{}_mb{mb}n{seq}",
+                    attn_tag.unwrap()
+                ))?)
+            } else {
+                None
+            },
+        })
+    }
+
+    /// Full fwd+bwd for one micro-batch, composed from stage artifacts.
+    /// `layer_params[i]` is the Bundle of layer i (manifest order);
+    /// `embed`/`final_norm` are the tied embedding and final norm.
+    /// Returns (ce, grads per layer, g_embed, g_final_norm).
+    #[allow(clippy::type_complexity)]
+    pub fn fwd_bwd(
+        &self,
+        embed: &Tensor,
+        final_norm: &Tensor,
+        layer_params: &[Bundle],
+        tokens: &Tensor,
+        targets: &Tensor,
+    ) -> Result<(f32, Vec<Bundle>, Tensor, Tensor)> {
+        // forward: keep stage inputs (activation recomputation keeps only
+        // these (mb, n, d) tensors live -- the Megatron trade).
+        let mut acts: Vec<Tensor> = Vec::with_capacity(self.layout.len() + 1);
+        let x0 = self.embed.run(&[embed, tokens])?.remove(0);
+        acts.push(x0);
+        for (i, &ch) in self.layout.iter().enumerate() {
+            let exe = if ch == 'L' {
+                &self.block_fwd_l
+            } else {
+                self.block_fwd_n.as_ref().expect("no N artifacts")
+            };
+            let out = exe.run_bundled(&[&layer_params[i]], &[acts.last().unwrap()])?;
+            acts.push(out.into_iter().next().unwrap());
+        }
+        // head bwd (computes loss + gx + embed/final grads)
+        let out = self
+            .head_bwd
+            .run(&[final_norm, embed, acts.last().unwrap(), targets])?;
+        let (g_fn, mut g_embed, mut gx, ce) = (
+            out[0].clone(),
+            out[1].clone(),
+            out[2].clone(),
+            out[3].item_f32()?,
+        );
+        // backward through blocks in reverse (recompute inside artifact)
+        let mut layer_grads: Vec<Option<Bundle>> = vec![None; self.layout.len()];
+        for (i, &ch) in self.layout.iter().enumerate().rev() {
+            let exe = if ch == 'L' {
+                &self.block_bwd_l
+            } else {
+                self.block_bwd_n.as_ref().unwrap()
+            };
+            let mut out = exe.run_bundled(&[&layer_params[i]], &[&acts[i], &gx])?;
+            gx = out.pop().unwrap(); // last result = gx
+            layer_grads[i] = Some(Bundle::new(out));
+        }
+        // embedding backward (token gather) + tie with head grad
+        let g_emb_tok = self.embed_bwd.run(&[tokens, &gx])?.remove(0);
+        g_embed.add_assign(&g_emb_tok)?;
+        Ok((
+            ce,
+            layer_grads.into_iter().map(Option::unwrap).collect(),
+            g_embed,
+            g_fn,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::check;
+
+    #[test]
+    fn gpipe_schedule_valid_and_peak_is_m() {
+        let r = simulate(Schedule::GPipe, 4, 8).unwrap();
+        assert_eq!(r.peak_live, vec![8, 8, 8, 8]);
+    }
+
+    #[test]
+    fn one_f1b_bounds_peak_by_stage_depth() {
+        let r = simulate(Schedule::OneF1B, 4, 8).unwrap();
+        // 1F1B: stage s holds at most (stages - s) activations
+        assert_eq!(r.peak_live, vec![4, 3, 2, 1]);
+    }
+
+    #[test]
+    fn schedules_valid_for_many_shapes() {
+        check("pipeline_schedules_valid", 48, |rng| {
+            let stages = 1 + rng.below(8);
+            let m = 1 + rng.below(12);
+            for kind in [Schedule::GPipe, Schedule::OneF1B] {
+                let r = simulate(kind, stages, m).unwrap();
+                // every stage must end with zero live activations
+                assert!(r.peak_live.iter().all(|&p| p >= 1));
+                if stages > 1 && m >= stages {
+                    let g = simulate(Schedule::GPipe, stages, m).unwrap();
+                    let f = simulate(Schedule::OneF1B, stages, m).unwrap();
+                    assert!(
+                        f.peak_live[0] <= g.peak_live[0],
+                        "1F1B peak must not exceed GPipe"
+                    );
+                }
+            }
+        });
+    }
+}

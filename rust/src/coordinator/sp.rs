@@ -1,0 +1,281 @@
+//! LASP sequence parallelism (paper §2.2.1 + App. A.3) and the hybrid-model
+//! SP strategy (paper §2.2.2).
+//!
+//! Kernel-level executors, exactly the paper's Alg. 1/2: the sequence is
+//! split into T chunks over T SP ranks; each rank computes its memory-state
+//! contribution `M_t = K_t^T V_t` (with the instance's decay) via the
+//! `sp_state_*` artifact, states are exchanged, each rank folds the strict
+//! prefix `M_{1:t-1}` and computes its output via `sp_output_*`.
+//!
+//! Two communication modes:
+//!  - `Lasp2` (paper's LASP-2): one **AllGather** of the (Dk, Dv) states;
+//!    every rank folds the prefix locally.  Single collective, O(T d^2)
+//!    volume independent of sequence length.
+//!  - `Lasp1` ring: rank t receives the folded prefix M_{1:t-1} from rank
+//!    t-1, uses it, folds its own contribution, sends M_{1:t} to t+1 --
+//!    the point-to-point pattern of LASP-1 (sequential chain).
+//!
+//! For the attention ('N') layers of hybrid models, `attn_sp` all-gathers
+//! K/V across ranks and computes local-Q attention (the Llama3-style
+//! strategy the paper adopts): communication is O(N d) and grows with
+//! sequence length -- the contrast the hybrid-SP bench measures.
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use crate::collectives::CommHandle;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpMode {
+    Lasp1Ring,
+    Lasp2AllGather,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateKind {
+    None,
+    Scalar,
+    Vector,
+}
+
+impl GateKind {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            GateKind::None => "none",
+            GateKind::Scalar => "scalar",
+            GateKind::Vector => "vector",
+        }
+    }
+}
+
+/// Fold `contrib` into `prefix` under the chunk's total log-decay:
+/// M' = exp(log_decay)[:, None] * M + contrib.   Shapes:
+/// prefix/contrib (B, H, Dk, Dv), log_decay (B, H, Dk).
+pub fn fold_state(prefix: &mut Tensor, contrib: &Tensor, log_decay: &Tensor) -> Result<()> {
+    let (dk, dv) = {
+        let s = &prefix.shape;
+        (s[s.len() - 2], s[s.len() - 1])
+    };
+    let ld = log_decay.as_f32()?.to_vec();
+    let c = contrib.as_f32()?.to_vec();
+    let p = prefix.as_f32_mut()?;
+    // iterate (bh, dk, dv)
+    let bh = p.len() / (dk * dv);
+    for b in 0..bh {
+        for i in 0..dk {
+            let decay = ld[b * dk + i].exp();
+            let row = b * dk * dv + i * dv;
+            for j in 0..dv {
+                p[row + j] = decay * p[row + j] + c[row + j];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Per-rank LASP execution for one (already chunk-split) LSM layer input.
+/// `q/k/v`: this rank's chunk (B, H, C, D).  `gates`: None / (B,H,C) /
+/// (B,H,C,Dk) according to `kind`.  Returns this rank's output chunk.
+pub struct SpExecutor {
+    pub kind: GateKind,
+    state_exe: std::rc::Rc<crate::runtime::Executable>,
+    out_exe: std::rc::Rc<crate::runtime::Executable>,
+}
+
+impl SpExecutor {
+    pub fn new(rt: &Runtime, kind: GateKind) -> Result<Self> {
+        Ok(SpExecutor {
+            kind,
+            state_exe: rt.load(&format!("sp_state_{}", kind.tag()))?,
+            out_exe: rt.load(&format!("sp_output_{}", kind.tag()))?,
+        })
+    }
+
+    fn state(&self, k: &Tensor, v: &Tensor, gates: Option<&Tensor>) -> Result<(Tensor, Tensor)> {
+        let out = match (self.kind, gates) {
+            (GateKind::None, _) => self.state_exe.run(&[k, v])?,
+            (_, Some(g)) => self.state_exe.run(&[k, v, g])?,
+            _ => anyhow::bail!("gate kind {:?} requires gates", self.kind),
+        };
+        Ok((out[0].clone(), out[1].clone()))
+    }
+
+    fn output(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        gates: Option<&Tensor>,
+        m_prefix: &Tensor,
+    ) -> Result<Tensor> {
+        let out = match (self.kind, gates) {
+            (GateKind::None, _) => self.out_exe.run(&[q, k, v, m_prefix])?,
+            (_, Some(g)) => self.out_exe.run(&[q, k, v, g, m_prefix])?,
+            _ => anyhow::bail!("gate kind {:?} requires gates", self.kind),
+        };
+        Ok(out[0].clone())
+    }
+
+    /// One LASP layer pass on this SP rank.  (Paper Alg. 2; the masked
+    /// variant -- intra-chunk causality is handled inside `sp_output`.)
+    pub fn run(
+        &self,
+        comm: &CommHandle,
+        mode: SpMode,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        gates: Option<&Tensor>,
+    ) -> Result<Tensor> {
+        let (mc, ld) = self.state(k, v, gates)?;
+        let state_shape = mc.shape.clone();
+        let m_prefix = match mode {
+            SpMode::Lasp2AllGather => {
+                // LASP-2: one AllGather of (contrib, log_decay); every rank
+                // folds the strict prefix locally.
+                let packed = pack_state(&mc, &ld)?;
+                let all = comm.all_gather(packed);
+                let mut prefix = Tensor::zeros(&state_shape);
+                for t in all.iter().take(comm.rank) {
+                    let (c, d) = unpack_state(t, &state_shape)?;
+                    fold_state(&mut prefix, &c, &d)?;
+                }
+                prefix
+            }
+            SpMode::Lasp1Ring => {
+                // LASP-1: sequential ring chain.  Rank 0 starts from zero;
+                // rank t receives M_{1:t-1}+flag from t-1.  The ring wraps,
+                // so the last rank's send is drained by rank 0 (discarded).
+                let zero = Tensor::zeros(&state_shape);
+                let prefix = if comm.rank == 0 {
+                    zero.clone()
+                } else {
+                    // blocking receive of the folded prefix from rank-1
+                    comm.ring_recv()?
+                };
+                // fold our contribution and pass along
+                let mut next = prefix.clone();
+                fold_state(&mut next, &mc, &ld)?;
+                comm.ring_send(next)?;
+                if comm.rank == 0 {
+                    // drain the wrap-around message from the last rank
+                    let _ = comm.ring_recv()?;
+                }
+                prefix
+            }
+        };
+        self.output(q, k, v, gates, &m_prefix)
+    }
+}
+
+/// Pack (contrib, log_decay) into one tensor for a single collective
+/// (LASP-2 sends exactly one message per rank).
+pub fn pack_state(mc: &Tensor, ld: &Tensor) -> Result<Tensor> {
+    let mut data = mc.as_f32()?.to_vec();
+    data.extend_from_slice(ld.as_f32()?);
+    Ok(Tensor::f32(&[data.len()], data))
+}
+
+pub fn unpack_state(packed: &Tensor, state_shape: &[usize]) -> Result<(Tensor, Tensor)> {
+    let n: usize = state_shape.iter().product();
+    let v = packed.as_f32()?;
+    let dv = state_shape[state_shape.len() - 1];
+    let mut ld_shape = state_shape.to_vec();
+    ld_shape.pop();
+    let _ = dv;
+    Ok((
+        Tensor::f32(state_shape, v[..n].to_vec()),
+        Tensor::f32(&ld_shape, v[n..].to_vec()),
+    ))
+}
+
+/// Hybrid-SP attention layer (paper §2.2.2): all-gather K/V over the SP
+/// group, compute attention for the local Q chunk with the correct global
+/// offset.  `t` = SP world size baked into the artifact name.
+pub struct AttnSpExecutor {
+    exe: std::rc::Rc<crate::runtime::Executable>,
+    chunk: usize,
+}
+
+impl AttnSpExecutor {
+    pub fn new(rt: &Runtime, sp_world: usize) -> Result<Self> {
+        let exe = rt.load(&format!("attn_sp_t{sp_world}"))?;
+        let chunk = exe.spec.meta_usize("chunk").unwrap_or(0);
+        Ok(AttnSpExecutor { exe, chunk })
+    }
+
+    pub fn run(
+        &self,
+        comm: &CommHandle,
+        q_local: &Tensor,
+        k_local: &Tensor,
+        v_local: &Tensor,
+    ) -> Result<Tensor> {
+        // AllGather K and V along the sequence axis (rank order).
+        let ks = comm.all_gather(k_local.clone());
+        let vs = comm.all_gather(v_local.clone());
+        let k_full = concat_seq(&ks)?;
+        let v_full = concat_seq(&vs)?;
+        let pos0 = Tensor::scalar_i32((comm.rank * self.chunk) as i32);
+        Ok(self.exe.run(&[q_local, &k_full, &v_full, &pos0])?[0].clone())
+    }
+}
+
+/// Concatenate (B, H, C, D) chunks along the sequence axis.
+pub fn concat_seq(parts: &[Arc<Tensor>]) -> Result<Tensor> {
+    anyhow::ensure!(!parts.is_empty());
+    let s = &parts[0].shape;
+    anyhow::ensure!(s.len() == 4, "expected (B,H,C,D)");
+    let (b, h, c, d) = (s[0], s[1], s[2], s[3]);
+    let t = parts.len();
+    let mut out = vec![0f32; b * h * c * t * d];
+    for (ti, part) in parts.iter().enumerate() {
+        let src = part.as_f32()?;
+        for bi in 0..b * h {
+            for ci in 0..c {
+                let dst_row = (bi * (c * t) + ti * c + ci) * d;
+                let src_row = (bi * c + ci) * d;
+                out[dst_row..dst_row + d]
+                    .copy_from_slice(&src[src_row..src_row + d]);
+            }
+        }
+    }
+    Ok(Tensor::f32(&[b, h, c * t, d], out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_state_applies_decay() {
+        let mut prefix = Tensor::f32(&[1, 1, 2, 2], vec![1., 1., 1., 1.]);
+        let contrib = Tensor::f32(&[1, 1, 2, 2], vec![0.5; 4]);
+        let ld = Tensor::f32(&[1, 1, 2], vec![0.0, (0.5f32).ln()]);
+        fold_state(&mut prefix, &contrib, &ld).unwrap();
+        let got = prefix.as_f32().unwrap();
+        assert!((got[0] - 1.5).abs() < 1e-6); // decay 1.0
+        assert!((got[2] - 1.0).abs() < 1e-6); // decay 0.5
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mc = Tensor::f32(&[1, 1, 2, 3], (0..6).map(|x| x as f32).collect());
+        let ld = Tensor::f32(&[1, 1, 2], vec![-0.1, -0.2]);
+        let packed = pack_state(&mc, &ld).unwrap();
+        let (mc2, ld2) = unpack_state(&packed, &[1, 1, 2, 3]).unwrap();
+        assert_eq!(mc, mc2);
+        assert_eq!(ld, ld2);
+    }
+
+    #[test]
+    fn concat_seq_layout() {
+        let a = Arc::new(Tensor::f32(&[1, 1, 2, 2], vec![1., 2., 3., 4.]));
+        let b = Arc::new(Tensor::f32(&[1, 1, 2, 2], vec![5., 6., 7., 8.]));
+        let c = concat_seq(&[a, b]).unwrap();
+        assert_eq!(c.shape, vec![1, 1, 4, 2]);
+        assert_eq!(c.as_f32().unwrap(), &[1., 2., 3., 4., 5., 6., 7., 8.]);
+    }
+}

@@ -1,0 +1,95 @@
+//! Evaluation harness (paper Tables 5/6 substitution -- see DESIGN.md):
+//! held-out perplexity on the synthetic corpus, plus a recall suite
+//! (phonebook lookup / needle-in-a-haystack) that exercises exactly the
+//! capability the paper's hybrid-vs-pure comparison turns on.
+
+use anyhow::Result;
+
+use crate::data::{self, RecallEpisode};
+use crate::inference::{greedy, LsmDecoder};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::{Bundle, Tensor};
+
+/// Held-out perplexity via the `eval_loss_*` artifact.
+pub fn perplexity(
+    rt: &Runtime,
+    tag: &str,
+    params: &Bundle,
+    batch: usize,
+    seq: usize,
+    batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let exe = rt.load(&format!("eval_loss_{tag}_b{batch}n{seq}"))?;
+    let var = rt.manifest.variant(tag)?;
+    let mut lm = data::ZipfLm::new(var.config.vocab, seed);
+    let mut total = 0.0f64;
+    for _ in 0..batches {
+        let b = data::batch_from_stream(&mut lm, batch, seq);
+        let out = exe.run_bundled(&[params], &[&b.tokens, &b.targets])?;
+        total += out[1].item_f32()? as f64; // ce
+    }
+    Ok((total / batches as f64).exp())
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RecallReport {
+    pub episodes: usize,
+    pub correct: usize,
+}
+
+impl RecallReport {
+    pub fn accuracy(&self) -> f64 {
+        if self.episodes == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.episodes as f64
+        }
+    }
+}
+
+/// Run recall episodes through a decoder: feed the prompt token by token,
+/// then check whether greedy decoding emits the answer token.
+/// The decoder's batch lane 0 carries the episode (other lanes idle).
+pub fn recall_eval(
+    decoder: &mut LsmDecoder,
+    episodes: &[RecallEpisode],
+) -> Result<RecallReport> {
+    let b = decoder.batch;
+    let mut report = RecallReport::default();
+    for ep in episodes {
+        decoder.reset();
+        let mut logits = None;
+        for (pos, &tok) in ep.prompt.iter().enumerate() {
+            let t = Tensor::i32(&[b], vec![tok; b]);
+            logits = Some(decoder.step(&t, pos as i32)?);
+        }
+        let pred = greedy(&logits.unwrap())?;
+        report.episodes += 1;
+        if pred.as_i32()?[0] == ep.answer {
+            report.correct += 1;
+        }
+    }
+    Ok(report)
+}
+
+/// Build a deterministic recall suite.
+pub fn make_suite(
+    vocab: usize,
+    n_phonebook: usize,
+    pairs: usize,
+    n_niah: usize,
+    haystack: usize,
+    seed: u64,
+) -> Vec<RecallEpisode> {
+    let mut rng = Rng::new(seed);
+    let mut suite = Vec::new();
+    for _ in 0..n_phonebook {
+        suite.push(data::phonebook_episode(&mut rng, vocab, pairs));
+    }
+    for _ in 0..n_niah {
+        suite.push(data::niah_episode(&mut rng, vocab, haystack));
+    }
+    suite
+}

@@ -1,0 +1,213 @@
+//! Inference driver (paper Fig. 5): autoregressive decoding from Rust over
+//! the `decode_*` artifacts.
+//!
+//! Linear-MoE models carry one constant-size (Dk, Dv) state per head per
+//! layer -> constant per-token latency and memory.  The attention Baseline
+//! carries a KV cache; we allocate it as a power-of-two **staircase**
+//! (decode_..._n{128,256,...} artifacts): step t runs the smallest cache
+//! >= t, mirroring how paged/banded serving systems grow the cache, and
+//! giving per-token cost that grows with position -- the Fig. 5 contrast.
+
+use anyhow::Result;
+use std::rc::Rc;
+
+use crate::runtime::{Executable, Runtime, Variant};
+use crate::tensor::{Bundle, Tensor};
+
+pub struct DecodeStats {
+    pub tokens: usize,
+    pub secs: f64,
+    /// modeled state bytes at the final position (memcost)
+    pub state_bytes: usize,
+}
+
+/// Decode state for one model: per-layer tensors in manifest order.
+pub struct DecodeState {
+    pub tensors: Vec<Tensor>,
+}
+
+fn init_state(var: &Variant, spec: &crate::runtime::ArtifactSpec, n_params: usize) -> DecodeState {
+    // state leaves sit between params and (token, pos) in the arg list.
+    let n_args = spec.args.len();
+    let state_specs = &spec.args[n_params..n_args - 2];
+    let tensors = state_specs
+        .iter()
+        .map(|s| {
+            if s.dtype.contains("int") {
+                Tensor::i32(&s.shape, vec![0; s.numel()])
+            } else {
+                Tensor::zeros(&s.shape)
+            }
+        })
+        .collect();
+    let _ = var;
+    DecodeState { tensors }
+}
+
+/// Pure-LSM decoder: one artifact, constant state.
+pub struct LsmDecoder {
+    pub batch: usize,
+    exe: Rc<Executable>,
+    params: Bundle,
+    state: DecodeState,
+    pub var: Variant,
+}
+
+impl LsmDecoder {
+    pub fn new(rt: &Runtime, tag: &str, batch: usize) -> Result<Self> {
+        let exe = rt.load(&format!("decode_{tag}_b{batch}"))?;
+        let params = rt.init_params(tag, 0)?;
+        let var = rt.manifest.variant(tag)?.clone();
+        let state = init_state(&var, &exe.spec, params.tensors.len());
+        Ok(LsmDecoder { batch, exe, params, state, var })
+    }
+
+    pub fn with_params(mut self, params: Bundle) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// One step: feed `token` (B,) at position `pos`, return logits (B, V).
+    pub fn step(&mut self, token: &Tensor, pos: i32) -> Result<Tensor> {
+        let pos_t = Tensor::scalar_i32(pos);
+        let mut args: Vec<&Tensor> = Vec::new();
+        args.extend(self.params.tensors.iter());
+        args.extend(self.state.tensors.iter());
+        args.push(token);
+        args.push(&pos_t);
+        let mut out = self.exe.run(&args)?;
+        let logits = out.remove(0);
+        self.state.tensors = out;
+        Ok(logits)
+    }
+
+    pub fn reset(&mut self) {
+        for t in &mut self.state.tensors {
+            *t = if t.is_f32() {
+                Tensor::zeros(&t.shape)
+            } else {
+                Tensor::i32(&t.shape, vec![0; t.numel()])
+            };
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.state.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+}
+
+/// Attention decoder with KV-cache staircase.
+pub struct AttnDecoder {
+    pub batch: usize,
+    exes: Vec<(usize, Rc<Executable>)>,
+    params: Bundle,
+    state: DecodeState,
+    cur: usize, // current staircase index
+    pub var: Variant,
+}
+
+impl AttnDecoder {
+    pub fn new(rt: &Runtime, tag: &str, batch: usize, sizes: &[usize]) -> Result<Self> {
+        let mut exes = Vec::new();
+        for &n in sizes {
+            exes.push((n, rt.load(&format!("decode_{tag}_b{batch}_n{n}"))?));
+        }
+        let params = rt.init_params(tag, 0)?;
+        let var = rt.manifest.variant(tag)?.clone();
+        let state = init_state(&var, &exes[0].1.spec, params.tensors.len());
+        Ok(AttnDecoder {
+            batch,
+            exes,
+            params,
+            state,
+            cur: 0,
+            var,
+        })
+    }
+
+    /// Grow the KV cache into the next staircase size, copying history.
+    fn grow_to(&mut self, idx: usize) {
+        let (new_n, exe) = &self.exes[idx];
+        let spec = &exe.spec;
+        let n_params = self.params.tensors.len();
+        let state_specs = &spec.args[n_params..spec.args.len() - 2];
+        let mut new_tensors = Vec::with_capacity(self.state.tensors.len());
+        for (old, s) in self.state.tensors.iter().zip(state_specs) {
+            // caches are (B, H, N, Dh): copy old rows into the front.
+            let mut t = Tensor::zeros(&s.shape);
+            if old.shape.len() == 4 && s.shape.len() == 4 {
+                let (b, h, n_old, d) =
+                    (old.shape[0], old.shape[1], old.shape[2], old.shape[3]);
+                let n_new = s.shape[2];
+                let src = old.as_f32().unwrap();
+                let dst = t.as_f32_mut().unwrap();
+                for bi in 0..b * h {
+                    for r in 0..n_old.min(n_new) {
+                        let so = (bi * n_old + r) * d;
+                        let dofs = (bi * n_new + r) * d;
+                        dst[dofs..dofs + d].copy_from_slice(&src[so..so + d]);
+                    }
+                }
+            }
+            new_tensors.push(t);
+        }
+        self.state.tensors = new_tensors;
+        self.cur = idx;
+        let _ = new_n;
+    }
+
+    pub fn step(&mut self, token: &Tensor, pos: i32) -> Result<Tensor> {
+        // grow staircase if pos exceeds the current cache
+        while pos as usize >= self.exes[self.cur].0 {
+            let next = self.cur + 1;
+            anyhow::ensure!(next < self.exes.len(), "decode length exceeds staircase");
+            self.grow_to(next);
+        }
+        let exe = self.exes[self.cur].1.clone();
+        let pos_t = Tensor::scalar_i32(pos);
+        let mut args: Vec<&Tensor> = Vec::new();
+        args.extend(self.params.tensors.iter());
+        args.extend(self.state.tensors.iter());
+        args.push(token);
+        args.push(&pos_t);
+        let mut out = exe.run(&args)?;
+        let logits = out.remove(0);
+        self.state.tensors = out;
+        Ok(logits)
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.state.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+}
+
+/// Greedy argmax over (B, V) logits -> (B,) tokens.
+pub fn greedy(logits: &Tensor) -> Result<Tensor> {
+    let v = *logits.shape.last().unwrap();
+    let b = logits.numel() / v;
+    let data = logits.as_f32()?;
+    let mut out = Vec::with_capacity(b);
+    for r in 0..b {
+        let row = &data[r * v..(r + 1) * v];
+        let mut best = 0usize;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = i;
+            }
+        }
+        out.push(best as i32);
+    }
+    Ok(Tensor::i32(&[b], out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax_rows() {
+        let l = Tensor::f32(&[2, 3], vec![0.1, 0.9, 0.0, 2.0, -1.0, 1.0]);
+        let g = greedy(&l).unwrap();
+        assert_eq!(g.as_i32().unwrap(), &[1, 0]);
+    }
+}

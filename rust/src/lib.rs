@@ -1,0 +1,23 @@
+//! Linear-MoE: a Rust + JAX + Pallas reproduction of
+//! "Linear-MoE: Linear Sequence Modeling Meets Mixture-of-Experts" (2025).
+//!
+//! Three layers:
+//!  - L1: Pallas LSM kernels (build-time Python, python/compile/kernels)
+//!  - L2: JAX Linear-MoE model, AOT-lowered to HLO text (python/compile)
+//!  - L3: this crate -- the Training/Inference subsystems: PJRT runtime,
+//!        collectives, device mesh, LASP sequence parallelism, pipeline
+//!        schedules, expert-parallel MoE dispatch, distributed optimizer,
+//!        data pipeline, metrics, CLI.
+
+pub mod json;
+pub mod rng;
+pub mod tensor;
+pub mod runtime;
+pub mod collectives;
+pub mod topology;
+pub mod memcost;
+pub mod data;
+pub mod coordinator;
+pub mod inference;
+pub mod eval;
+pub mod bench_util;

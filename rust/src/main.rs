@@ -1,0 +1,201 @@
+//! Linear-MoE launcher CLI.
+//!
+//!   linear-moe train --tag small_gla --steps 200 --lr 3e-4 [--dp 2] ...
+//!   linear-moe infer --tag tiny_bla --len 256
+//!   linear-moe eval  --tag small_gla --ckpt path.ckpt
+//!   linear-moe show-config [--tag tiny_gla]
+//!
+//! Hand-rolled arg parsing (offline build: no clap); every subcommand maps
+//! onto library entry points so examples/ and benches/ share the code.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+use linear_moe::coordinator::ddp::{run_ddp, run_single, DdpConfig};
+use linear_moe::coordinator::{checkpoint, metrics};
+use linear_moe::data;
+use linear_moe::inference::{greedy, LsmDecoder};
+use linear_moe::memcost;
+use linear_moe::runtime::Runtime;
+use linear_moe::tensor::Tensor;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            m.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    m
+}
+
+fn flag<T: std::str::FromStr>(m: &HashMap<String, String>, k: &str, default: T) -> T {
+    m.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+
+    match cmd {
+        "train" => train(&dir, &flags),
+        "infer" => infer(&dir, &flags),
+        "eval" => eval_cmd(&dir, &flags),
+        "show-config" => show_config(&dir, &flags),
+        _ => {
+            println!(
+                "linear-moe <train|infer|eval|show-config> [--flags]\n\
+                 train:  --tag tiny_gla --steps 20 --lr 1e-3 --batch 2 --seq 128 \
+                 [--dp N] [--grad-accum N] [--save ckpt.bin] [--curve out.csv]\n\
+                 infer:  --tag tiny_bla --batch 4 --len 64\n\
+                 eval:   --tag tiny_gla --batch 2 --seq 128 [--batches 8]\n\
+                 show-config: [--tag tiny_gla] -- print variants + memory model"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn train(dir: &str, f: &HashMap<String, String>) -> Result<()> {
+    let tag: String = flag(f, "tag", "tiny_gla".to_string());
+    let steps: usize = flag(f, "steps", 20);
+    let lr: f32 = flag(f, "lr", 1e-3);
+    let batch: usize = flag(f, "batch", 2);
+    let seq: usize = flag(f, "seq", 128);
+    let dp: usize = flag(f, "dp", 1);
+    let grad_accum: usize = flag(f, "grad-accum", 1);
+
+    let rt = Runtime::new(dir)?;
+    let vocab = rt.manifest.variant(&tag)?.config.vocab;
+    drop(rt);
+    let bf: linear_moe::coordinator::ddp::BatchFn =
+        std::sync::Arc::new(move |idx, n| {
+            let mut lm = data::ZipfLm::new(vocab, 500 + idx as u64);
+            let b = data::batch_from_stream(&mut lm, batch, n);
+            (b.tokens, b.targets)
+        });
+    let have_fwd_bwd = Runtime::new(dir)?
+        .manifest
+        .artifacts
+        .contains_key(&format!("fwd_bwd_{tag}_b{batch}n{seq}"));
+    let report = if dp > 1 {
+        run_ddp(
+            &DdpConfig {
+                artifacts_dir: dir.into(),
+                tag: tag.clone(),
+                batch,
+                seq,
+                dp,
+                lr,
+                steps,
+                seed: 0,
+            },
+            bf,
+        )?
+    } else if have_fwd_bwd && grad_accum > 1 {
+        run_single(dir, &tag, batch, seq, lr, steps, bf, grad_accum)?
+    } else {
+        linear_moe::coordinator::ddp::run_fused(dir, &tag, batch, seq, lr, steps, bf, 10)?
+    };
+    let mut curve = metrics::LossCurve::new(&tag);
+    for (i, l) in report.losses.iter().enumerate() {
+        curve.push(i, *l);
+        if i % 10 == 0 || i + 1 == report.losses.len() {
+            println!("step {i:5}  loss {l:.4}");
+        }
+    }
+    println!(
+        "throughput: {:.0} tokens/s  (dp={dp}, traffic ag={} B rs={} B)",
+        report.tokens_per_sec, report.traffic.0, report.traffic.1
+    );
+    if let Some(path) = f.get("curve") {
+        metrics::write_csv(path, &[&curve])?;
+        println!("wrote {path}");
+    }
+    if let (Some(path), Some(params)) = (f.get("save"), &report.params) {
+        checkpoint::save(path, &[("params", params)])?;
+        println!("saved {path}");
+    }
+    Ok(())
+}
+
+fn infer(dir: &str, f: &HashMap<String, String>) -> Result<()> {
+    let tag: String = flag(f, "tag", "tiny_bla".to_string());
+    let batch: usize = flag(f, "batch", 4);
+    let len: usize = flag(f, "len", 64);
+    let rt = Runtime::new(dir)?;
+    let mut dec = LsmDecoder::new(&rt, &tag, batch)?;
+    let mut tok = Tensor::i32(&[batch], vec![1; batch]);
+    let t0 = std::time::Instant::now();
+    for pos in 0..len {
+        let logits = dec.step(&tok, pos as i32)?;
+        tok = greedy(&logits)?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "decoded {len} tokens x{batch} lanes in {dt:.2}s \
+         ({:.1} tok/s/lane); state {} KiB (constant)",
+        len as f64 / dt,
+        dec.state_bytes() / 1024
+    );
+    Ok(())
+}
+
+fn eval_cmd(dir: &str, f: &HashMap<String, String>) -> Result<()> {
+    let tag: String = flag(f, "tag", "tiny_gla".to_string());
+    let batch: usize = flag(f, "batch", 2);
+    let seq: usize = flag(f, "seq", 128);
+    let batches: usize = flag(f, "batches", 8);
+    let rt = Runtime::new(dir)?;
+    let params = if let Some(path) = f.get("ckpt") {
+        checkpoint::load(path)?.remove(0).1
+    } else {
+        rt.init_params(&tag, 0)?
+    };
+    let ppl = linear_moe::eval::perplexity(&rt, &tag, &params, batch, seq, batches, 77)?;
+    println!("{tag}: held-out perplexity {ppl:.2} over {batches} batches");
+    Ok(())
+}
+
+fn show_config(dir: &str, f: &HashMap<String, String>) -> Result<()> {
+    let rt = Runtime::new(dir)?;
+    let filter = f.get("tag");
+    let mut table = metrics::Table::new(&[
+        "variant", "layout", "lsm", "d_model", "experts", "params",
+        "activated", "train MiB (b4 n512)",
+    ]);
+    for (tag, v) in &rt.manifest.variants {
+        if let Some(want) = filter {
+            if *want != *tag {
+                continue;
+            }
+        }
+        let p = memcost::ParallelCfg::single();
+        let mib = memcost::mib(memcost::train_bytes(&v.config, 4, 512, &p, false));
+        table.row(&[
+            tag.clone(),
+            v.config.layout.clone(),
+            v.config.lsm.clone(),
+            v.config.d_model.to_string(),
+            format!("{}/{}", v.config.top_k, v.config.n_experts),
+            v.params_total.to_string(),
+            v.params_activated.to_string(),
+            format!("{mib:.1}"),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

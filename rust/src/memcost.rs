@@ -1,0 +1,221 @@
+//! Analytical accelerator-memory model.
+//!
+//! The paper's Table 3/4 memory columns are A100-80G numbers; this testbed
+//! has no GPU, so memory is *modeled*: params + grads + optimizer states +
+//! activations + (at decode) KV cache vs LSM state, under the active
+//! parallelism config.  The model counts exactly the terms that dominate
+//! the paper's numbers, so the *shape* (quadratic/linear/flat growth in
+//! sequence length; EP/TP/PP sharding ratios) reproduces even though the
+//! absolute scale is whatever model size we instantiate.
+//!
+//! All quantities in bytes, f32 elements (4 bytes) unless noted.
+
+use crate::runtime::ModelConfig;
+
+pub const ELT: usize = 4; // f32
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ParallelCfg {
+    pub dp: usize,
+    pub sp: usize,
+    pub pp: usize,
+    pub tp: usize,
+    pub ep: usize,
+    /// ZeRO-1 distributed optimizer (shard Adam states over DP)
+    pub dist_opt: bool,
+}
+
+impl ParallelCfg {
+    pub fn single() -> Self {
+        ParallelCfg { dp: 1, sp: 1, pp: 1, tp: 1, ep: 1, dist_opt: false }
+    }
+}
+
+/// Parameter counts split by how each tensor shards.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamSplit {
+    /// embedding + head (shards over TP only)
+    pub embed: usize,
+    /// per-layer mixer + norms (shards over TP, splits over PP)
+    pub dense_per_layer: usize,
+    /// per-layer expert tensors (shards over EP and TP, splits over PP)
+    pub expert_per_layer: usize,
+}
+
+pub fn param_split(c: &ModelConfig) -> ParamSplit {
+    let d = c.d_model;
+    let dq = c.n_heads * c.d_head;
+    // mixer: wq/wk/wv/wo (+ gates, roughly one extra d*dq) + norms
+    let mixer = 4 * d * dq + d * dq + 4 * d;
+    let experts = c.n_experts * 3 * d * c.d_ffn + d * c.n_experts;
+    ParamSplit {
+        embed: c.vocab * d,
+        dense_per_layer: mixer,
+        expert_per_layer: experts,
+    }
+}
+
+/// Per-worker parameter bytes under a parallel config.
+pub fn param_bytes(c: &ModelConfig, p: &ParallelCfg) -> usize {
+    let s = param_split(c);
+    let layers_here = c.n_layers.div_ceil(p.pp);
+    let dense = s.dense_per_layer * layers_here / p.tp;
+    let experts = s.expert_per_layer * layers_here / (p.tp * p.ep);
+    // embedding lives on first/last PP stage; count it once per worker
+    // that holds it (pessimistic: every stage counts it / pp).
+    let embed = s.embed / p.tp;
+    (embed + dense + experts) * ELT
+}
+
+/// Activation bytes per worker for one training step.
+/// `flash`: attention layers avoid materializing the (N, N) score matrix
+/// (FlashAttention-2 comparator); the standard Baseline does not.
+pub fn activation_bytes(
+    c: &ModelConfig,
+    batch: usize,
+    seq: usize,
+    p: &ParallelCfg,
+    flash: bool,
+) -> usize {
+    let b = batch.div_ceil(p.dp);
+    let n = seq.div_ceil(p.sp);
+    let d = c.d_model;
+    let layers_here = c.n_layers.div_ceil(p.pp);
+    let mut per_layer_tok = 0usize;
+    // x, ln(x), q,k,v(+gate), o, moe hidden (top_k * d_ffn / d per token)
+    per_layer_tok += (6 * d) / p.tp + 2 * d;
+    per_layer_tok += c.top_k * c.d_ffn / p.tp;
+    let mut bytes = b * n * per_layer_tok * layers_here * ELT;
+    // quadratic score matrices on 'N' layers without flash
+    let n_attn = c.layout.chars().filter(|&ch| ch == 'N').count();
+    let attn_here = n_attn.div_ceil(p.pp);
+    if attn_here > 0 && !flash {
+        bytes += b * (c.n_heads / p.tp.min(c.n_heads)).max(1) * n * n * attn_here * ELT;
+    }
+    bytes
+}
+
+/// Optimizer + gradient bytes per worker.
+pub fn optimizer_bytes(c: &ModelConfig, p: &ParallelCfg) -> usize {
+    let params = param_bytes(c, p);
+    let adam = if p.dist_opt { 2 * params / p.dp } else { 2 * params };
+    params /* grads */ + adam
+}
+
+/// Total training-step memory per worker (Table 3 / Table 4 model).
+pub fn train_bytes(
+    c: &ModelConfig,
+    batch: usize,
+    seq: usize,
+    p: &ParallelCfg,
+    flash: bool,
+) -> usize {
+    param_bytes(c, p) + optimizer_bytes(c, p)
+        + activation_bytes(c, batch, seq, p, flash)
+}
+
+/// Decode-time state bytes (Fig. 5 model): LSM layers carry constant
+/// (Dk, Dv) states; attention layers carry KV caches of length `pos`.
+pub fn decode_state_bytes(c: &ModelConfig, batch: usize, pos: usize) -> usize {
+    let mut bytes = 0usize;
+    for ch in c.layout.chars() {
+        if ch == 'L' {
+            bytes += batch * c.n_heads * c.d_head * c.d_head * ELT;
+        } else {
+            bytes += 2 * batch * c.n_heads * pos * c.d_head * ELT;
+        }
+    }
+    bytes
+}
+
+/// Decode-time total (params + state).
+pub fn decode_bytes(c: &ModelConfig, batch: usize, pos: usize) -> usize {
+    param_bytes(c, &ParallelCfg::single()) + decode_state_bytes(c, batch, pos)
+}
+
+pub fn gib(bytes: usize) -> f64 {
+    bytes as f64 / (1u64 << 30) as f64
+}
+
+pub fn mib(bytes: usize) -> f64 {
+    bytes as f64 / (1u64 << 20) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(layout: &str) -> ModelConfig {
+        ModelConfig {
+            vocab: 2048,
+            d_model: 128,
+            n_heads: 2,
+            d_head: 64,
+            n_layers: layout.len(),
+            layout: layout.to_string(),
+            lsm: "gla".into(),
+            chunk: 64,
+            n_experts: 4,
+            top_k: 2,
+            d_ffn: 128,
+            capacity_factor: 2.0,
+        }
+    }
+
+    #[test]
+    fn lsm_training_memory_flat_in_seq() {
+        // Table 3 claim: at fixed tokens/iter, LSM memory is ~flat while
+        // Baseline (no flash) grows with N.
+        let c = cfg("LLLL");
+        let p = ParallelCfg::single();
+        let m1 = train_bytes(&c, 8, 256, &p, false);
+        let m2 = train_bytes(&c, 1, 2048, &p, false);
+        let ratio = m2 as f64 / m1 as f64;
+        assert!((0.8..1.2).contains(&ratio), "lsm ratio {ratio}");
+
+        let ca = cfg("NNNN");
+        let a1 = train_bytes(&ca, 8, 256, &p, false);
+        let a2 = train_bytes(&ca, 1, 2048, &p, false);
+        assert!(a2 as f64 / a1 as f64 > 1.5, "attn should grow: {a1} -> {a2}");
+        // ...and flash flattens it (the FlashAttention-2 row)
+        let f1 = train_bytes(&ca, 8, 256, &p, true);
+        let f2 = train_bytes(&ca, 1, 2048, &p, true);
+        assert!((f2 as f64 / f1 as f64) < 1.2);
+    }
+
+    #[test]
+    fn decode_memory_constant_vs_growing() {
+        // Fig. 5 claim.
+        let cl = cfg("LLLL");
+        let ca = cfg("NNNN");
+        let l1 = decode_state_bytes(&cl, 16, 1024);
+        let l2 = decode_state_bytes(&cl, 16, 131072);
+        assert_eq!(l1, l2, "LSM decode state must be constant");
+        let a1 = decode_state_bytes(&ca, 16, 1024);
+        let a2 = decode_state_bytes(&ca, 16, 131072);
+        assert_eq!(a2, a1 * 128, "KV cache linear in decode length");
+    }
+
+    #[test]
+    fn parallelism_shards_memory() {
+        // Table 4 (bottom) shape: EP=8 cuts expert params; TP=8 cuts all
+        // matmul params; PP=8 cuts layers.
+        let c = cfg("LLLLLLLL");
+        let base = train_bytes(&c, 4, 2048, &ParallelCfg::single(), false);
+        let ep8 = train_bytes(
+            &c, 4, 2048,
+            &ParallelCfg { dp: 1, sp: 1, pp: 1, tp: 1, ep: 8, dist_opt: false },
+            false);
+        let tp8 = train_bytes(
+            &c, 4, 2048,
+            &ParallelCfg { dp: 1, sp: 1, pp: 1, tp: 8, ep: 1, dist_opt: false },
+            false);
+        let pp8 = train_bytes(
+            &c, 4, 2048,
+            &ParallelCfg { dp: 1, sp: 1, pp: 8, tp: 1, ep: 1, dist_opt: false },
+            false);
+        assert!(ep8 < base);
+        assert!(tp8 < ep8, "tp shards more than ep (tp8={tp8} ep8={ep8})");
+        assert!(pp8 < base);
+    }
+}

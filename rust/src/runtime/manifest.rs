@@ -1,0 +1,220 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the contract between the build-time Python layers and
+//! the Rust runtime: artifact names, flattened argument/result specs (in
+//! HLO parameter order), model variant configs and parameter trees.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::json::{self, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeafSpec {
+    /// Pytree path, e.g. "[0]['layers'][0]['mixer']['wq']".
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl LeafSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub args: Vec<LeafSpec>,
+    pub results: Vec<LeafSpec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_layers: usize,
+    pub layout: String,
+    pub lsm: String,
+    pub chunk: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_ffn: usize,
+    pub capacity_factor: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub tag: String,
+    pub preset: String,
+    pub instance: String,
+    pub arch: String,
+    pub config: ModelConfig,
+    pub params_total: usize,
+    pub params_activated: usize,
+    pub param_specs: Vec<LeafSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn leaf_specs(v: &Json) -> Result<Vec<LeafSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of leaf specs"))?
+        .iter()
+        .map(|e| {
+            Ok(LeafSpec {
+                path: e.str_field("path")?,
+                shape: e
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| anyhow!("missing shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: e.str_field("dtype")?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+
+        let mut variants = BTreeMap::new();
+        for (tag, v) in root
+            .get("variants")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing variants"))?
+        {
+            let c = v.get("config").ok_or_else(|| anyhow!("variant missing config"))?;
+            variants.insert(
+                tag.clone(),
+                Variant {
+                    tag: tag.clone(),
+                    preset: v.str_field("preset")?,
+                    instance: v.str_field("instance")?,
+                    arch: v.str_field("arch")?,
+                    config: ModelConfig {
+                        vocab: c.usize_field("vocab")?,
+                        d_model: c.usize_field("d_model")?,
+                        n_heads: c.usize_field("n_heads")?,
+                        d_head: c.usize_field("d_head")?,
+                        n_layers: c.usize_field("n_layers")?,
+                        layout: c.str_field("layout")?,
+                        lsm: c.str_field("lsm")?,
+                        chunk: c.usize_field("chunk")?,
+                        n_experts: c.usize_field("n_experts")?,
+                        top_k: c.usize_field("top_k")?,
+                        d_ffn: c.usize_field("d_ffn")?,
+                        capacity_factor: c
+                            .get("capacity_factor")
+                            .and_then(|x| x.as_f64())
+                            .unwrap_or(1.0),
+                    },
+                    params_total: v.usize_field("params_total")?,
+                    params_activated: v.usize_field("params_activated")?,
+                    param_specs: leaf_specs(
+                        v.get("param_specs")
+                            .ok_or_else(|| anyhow!("missing param_specs"))?,
+                    )?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in root
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = a.str_field("name")?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    file: dir.join(a.str_field("file")?),
+                    kind: a.str_field("kind")?,
+                    args: leaf_specs(a.get("args").ok_or_else(|| anyhow!("missing args"))?)?,
+                    results: leaf_specs(
+                        a.get("results").ok_or_else(|| anyhow!("missing results"))?,
+                    )?,
+                    meta: a
+                        .get("meta")
+                        .and_then(|m| m.as_obj())
+                        .cloned()
+                        .unwrap_or_default(),
+                },
+            );
+        }
+
+        Ok(Manifest { dir, variants, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest (re-run `make artifacts`?)"))
+    }
+
+    pub fn variant(&self, tag: &str) -> Result<&Variant> {
+        self.variants
+            .get(tag)
+            .ok_or_else(|| anyhow!("variant {tag:?} not in manifest"))
+    }
+
+    /// All artifacts of a kind, e.g. every `train_step`.
+    pub fn by_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactSpec> {
+        self.artifacts.values().filter(move |a| a.kind == kind)
+    }
+
+    /// Find an artifact by kind + meta filters (variant/batch/seq...).
+    pub fn find(
+        &self,
+        kind: &str,
+        filters: &[(&str, &str)],
+    ) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .find(|a| {
+                a.kind == kind
+                    && filters.iter().all(|(k, want)| {
+                        a.meta.get(*k).is_some_and(|v| match v {
+                            Json::Str(s) => s == want,
+                            Json::Num(n) => {
+                                want.parse::<f64>().is_ok_and(|w| (*n - w).abs() < 1e-9)
+                            }
+                            _ => false,
+                        })
+                    })
+            })
+            .ok_or_else(|| anyhow!("no {kind:?} artifact matching {filters:?}"))
+    }
+}

@@ -1,0 +1,124 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos with 64-bit instruction ids).
+//!
+//! A `Runtime` owns one PJRT client plus a compile cache.  PJRT wrapper
+//! types hold raw pointers (not `Send`), so in multi-worker simulations
+//! each worker thread builds its own `Runtime`; workers exchange only
+//! host `Tensor`s through the collectives layer.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+pub use manifest::{ArtifactSpec, Manifest, ModelConfig, Variant};
+
+use crate::tensor::{Bundle, Tensor};
+
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened result tuple.
+    pub fn run(&self, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            args.len() == self.spec.args.len(),
+            "{}: got {} args, artifact wants {}",
+            self.spec.name, args.len(), self.spec.args.len()
+        );
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = out.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute with a leading parameter bundle + extra tensors (the common
+    /// calling convention of model artifacts).
+    pub fn run_bundled(&self, bundles: &[&Bundle], rest: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let mut args: Vec<&Tensor> = Vec::new();
+        for b in bundles {
+            args.extend(b.tensors.iter());
+        }
+        args.extend(rest.iter().copied());
+        self.run(&args)
+    }
+}
+
+pub struct Runtime {
+    pub manifest: Rc<Manifest>,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// cumulative artifact-compile wall time (perf accounting)
+    pub compile_secs: RefCell<f64>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        let manifest = Rc::new(Manifest::load(artifacts_dir)?);
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compile_secs: RefCell::new(0.0),
+        })
+    }
+
+    pub fn with_manifest(manifest: Rc<Manifest>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compile_secs: RefCell::new(0.0),
+        })
+    }
+
+    /// Load (compile-once, cached) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name:?}"))?;
+        *self.compile_secs.borrow_mut() += t0.elapsed().as_secs_f64();
+        let e = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Initialize a variant's parameters by executing its `init_*` artifact.
+    pub fn init_params(&self, tag: &str, seed: i32) -> Result<Bundle> {
+        let exe = self.load(&format!("init_{tag}"))?;
+        let seed_t = Tensor::scalar_i32(seed);
+        Ok(Bundle::new(exe.run(&[&seed_t])?))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

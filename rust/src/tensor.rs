@@ -1,0 +1,226 @@
+//! Host-side tensor type: the currency of the coordinator.
+//!
+//! Workers exchange `Tensor`s (plain host buffers) through collectives and
+//! channels; the runtime converts them to/from `xla::Literal` at the PJRT
+//! boundary.  Only the dtypes the artifacts use are supported (f32 / i32).
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} != data len {}", shape, data.len());
+        Tensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor::f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::f32(&[], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::i32(&[], vec![v])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self.data, Data::F32(_))
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// First element as f32 (for scalar results like losses).
+    pub fn item_f32(&self) -> Result<f32> {
+        self.as_f32()?.first().copied()
+            .ok_or_else(|| anyhow!("empty tensor"))
+    }
+
+    /// Convert to an XLA literal for execution.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            Data::F32(v) => xla::Literal::vec1(v),
+            Data::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::f32(&dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(Tensor::i32(&dims, lit.to_vec::<i32>()?)),
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+
+    /// Elementwise add (used for gradient accumulation across microbatches
+    /// and for folding tied-embedding grads).
+    pub fn add_assign(&mut self, other: &Tensor) -> Result<()> {
+        anyhow::ensure!(self.shape == other.shape, "shape mismatch");
+        let b = other.as_f32()?.to_vec();
+        let a = self.as_f32_mut()?;
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, s: f32) -> Result<()> {
+        for x in self.as_f32_mut()? {
+            *x *= s;
+        }
+        Ok(())
+    }
+}
+
+/// A named, ordered bundle of tensors (a flattened pytree: model params,
+/// optimizer state, gradients...).  Order always matches the manifest's
+/// flatten order, which is what the HLO artifacts expect.
+#[derive(Clone, Debug, Default)]
+pub struct Bundle {
+    pub tensors: Vec<Tensor>,
+}
+
+impl Bundle {
+    pub fn new(tensors: Vec<Tensor>) -> Self {
+        Bundle { tensors }
+    }
+
+    pub fn zeros_like(&self) -> Self {
+        Bundle {
+            tensors: self.tensors.iter().map(|t| Tensor::zeros(&t.shape)).collect(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    pub fn add_assign(&mut self, other: &Bundle) -> Result<()> {
+        anyhow::ensure!(self.tensors.len() == other.tensors.len());
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            a.add_assign(b)?;
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, s: f32) -> Result<()> {
+        for t in &mut self.tensors {
+            t.scale(s)?;
+        }
+        Ok(())
+    }
+
+    /// Concatenate all f32 tensors into one flat vector (optimizer
+    /// bucketing).  Returns (flat, per-tensor lengths).
+    pub fn flatten_f32(&self) -> Result<(Vec<f32>, Vec<usize>)> {
+        let mut flat = Vec::with_capacity(self.numel());
+        let mut lens = Vec::with_capacity(self.tensors.len());
+        for t in &self.tensors {
+            let v = t.as_f32()?;
+            flat.extend_from_slice(v);
+            lens.push(v.len());
+        }
+        Ok((flat, lens))
+    }
+
+    /// Inverse of `flatten_f32`: write `flat` back into the bundle.
+    pub fn unflatten_f32(&mut self, flat: &[f32]) -> Result<()> {
+        let mut off = 0;
+        for t in &mut self.tensors {
+            let dst = t.as_f32_mut()?;
+            dst.copy_from_slice(&flat[off..off + dst.len()]);
+            off += dst.len();
+        }
+        anyhow::ensure!(off == flat.len(), "flat length mismatch");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_flatten() {
+        let mut b = Bundle::new(vec![
+            Tensor::f32(&[2, 2], vec![1., 2., 3., 4.]),
+            Tensor::f32(&[3], vec![5., 6., 7.]),
+        ]);
+        let (flat, lens) = b.flatten_f32().unwrap();
+        assert_eq!(flat, vec![1., 2., 3., 4., 5., 6., 7.]);
+        assert_eq!(lens, vec![4, 3]);
+        let double: Vec<f32> = flat.iter().map(|x| x * 2.0).collect();
+        b.unflatten_f32(&double).unwrap();
+        assert_eq!(b.tensors[1].as_f32().unwrap(), &[10., 12., 14.]);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = Tensor::f32(&[2], vec![1., 2.]);
+        let b = Tensor::f32(&[2], vec![3., 4.]);
+        a.add_assign(&b).unwrap();
+        a.scale(0.5).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[2., 3.]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let mut a = Tensor::f32(&[2], vec![1., 2.]);
+        let b = Tensor::f32(&[3], vec![3., 4., 5.]);
+        assert!(a.add_assign(&b).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Device mesh: maps flat worker ranks onto the paper's five parallelism
+//! axes (DP × SP × PP × TP × EP, §2.2.3 "Hybrid Parallelism").
+//!
+//! Axis order (slowest- to fastest-varying): dp, sp, pp, tp, ep.
+//! Subgroups along one axis are the set of ranks that agree on every other
+//! coordinate -- e.g. the EP group of a rank is used for the MoE
+//! all-to-all, the SP group for the LASP AllGather.
+
+use anyhow::{ensure, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MeshShape {
+    pub dp: usize,
+    pub sp: usize,
+    pub pp: usize,
+    pub tp: usize,
+    pub ep: usize,
+}
+
+impl MeshShape {
+    pub fn new(dp: usize, sp: usize, pp: usize, tp: usize, ep: usize) -> Self {
+        MeshShape { dp, sp, pp, tp, ep }
+    }
+
+    pub fn world(&self) -> usize {
+        self.dp * self.sp * self.pp * self.tp * self.ep
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Coords {
+    pub dp: usize,
+    pub sp: usize,
+    pub pp: usize,
+    pub tp: usize,
+    pub ep: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    Dp,
+    Sp,
+    Pp,
+    Tp,
+    Ep,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeviceMesh {
+    pub shape: MeshShape,
+}
+
+impl DeviceMesh {
+    pub fn new(shape: MeshShape, world: usize) -> Result<DeviceMesh> {
+        ensure!(
+            shape.world() == world,
+            "mesh {:?} needs {} workers, got {}",
+            shape,
+            shape.world(),
+            world
+        );
+        Ok(DeviceMesh { shape })
+    }
+
+    pub fn world(&self) -> usize {
+        self.shape.world()
+    }
+
+    /// rank -> coordinates (row-major over [dp, sp, pp, tp, ep]).
+    pub fn coords(&self, rank: usize) -> Coords {
+        let s = &self.shape;
+        let mut r = rank;
+        let ep = r % s.ep;
+        r /= s.ep;
+        let tp = r % s.tp;
+        r /= s.tp;
+        let pp = r % s.pp;
+        r /= s.pp;
+        let sp = r % s.sp;
+        r /= s.sp;
+        let dp = r % s.dp;
+        Coords { dp, sp, pp, tp, ep }
+    }
+
+    /// coordinates -> rank.
+    pub fn rank(&self, c: Coords) -> usize {
+        let s = &self.shape;
+        (((c.dp * s.sp + c.sp) * s.pp + c.pp) * s.tp + c.tp) * s.ep + c.ep
+    }
+
+    fn axis_size(&self, axis: Axis) -> usize {
+        match axis {
+            Axis::Dp => self.shape.dp,
+            Axis::Sp => self.shape.sp,
+            Axis::Pp => self.shape.pp,
+            Axis::Tp => self.shape.tp,
+            Axis::Ep => self.shape.ep,
+        }
+    }
+
+    /// Ranks in `rank`'s subgroup along `axis`, ordered by that axis
+    /// coordinate.  `rank` is always a member.
+    pub fn axis_group(&self, rank: usize, axis: Axis) -> Vec<usize> {
+        let base = self.coords(rank);
+        (0..self.axis_size(axis))
+            .map(|i| {
+                let mut c = base;
+                match axis {
+                    Axis::Dp => c.dp = i,
+                    Axis::Sp => c.sp = i,
+                    Axis::Pp => c.pp = i,
+                    Axis::Tp => c.tp = i,
+                    Axis::Ep => c.ep = i,
+                }
+                self.rank(c)
+            })
+            .collect()
+    }
+
+    /// Index of `rank` within its `axis` subgroup.
+    pub fn axis_index(&self, rank: usize, axis: Axis) -> usize {
+        let c = self.coords(rank);
+        match axis {
+            Axis::Dp => c.dp,
+            Axis::Sp => c.sp,
+            Axis::Pp => c.pp,
+            Axis::Tp => c.tp,
+            Axis::Ep => c.ep,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{check, Rng};
+
+    #[test]
+    fn roundtrip_all_ranks() {
+        let mesh = DeviceMesh::new(MeshShape::new(2, 1, 2, 1, 2), 8).unwrap();
+        for r in 0..8 {
+            assert_eq!(mesh.rank(mesh.coords(r)), r);
+        }
+    }
+
+    #[test]
+    fn axis_groups_partition_world() {
+        // property: for any mesh shape, groups along each axis partition
+        // the world and each rank appears in exactly one group per axis.
+        check("axis_groups_partition", 32, |rng: &mut Rng| {
+            let dims: Vec<usize> = (0..5).map(|_| 1 << rng.below(3)).collect();
+            let shape = MeshShape::new(dims[0], dims[1], dims[2], dims[3], dims[4]);
+            let mesh = DeviceMesh::new(shape, shape.world()).unwrap();
+            for axis in [Axis::Dp, Axis::Sp, Axis::Pp, Axis::Tp, Axis::Ep] {
+                let mut seen = vec![0usize; mesh.world()];
+                for r in 0..mesh.world() {
+                    let g = mesh.axis_group(r, axis);
+                    assert!(g.contains(&r));
+                    assert_eq!(g[mesh.axis_index(r, axis)], r);
+                    for m in g {
+                        seen[m] += 1;
+                    }
+                }
+                // each rank appears axis_size times (once per group member)
+                for (r, &cnt) in seen.iter().enumerate() {
+                    assert_eq!(cnt, mesh.axis_size(axis), "rank {r} axis {axis:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn mismatched_world_rejected() {
+        assert!(DeviceMesh::new(MeshShape::new(2, 1, 2, 1, 2), 7).is_err());
+    }
+}

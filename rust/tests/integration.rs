@@ -1,0 +1,386 @@
+//! Integration tests over the real artifacts: these exercise the whole
+//! stack (Pallas kernels inside JAX-lowered HLO, executed via PJRT, driven
+//! by the Rust coordinator).  They require `make artifacts`.
+
+use std::sync::Arc;
+
+use linear_moe::collectives::Comm;
+use linear_moe::coordinator::ddp::{run_ddp, run_single, BatchFn, DdpConfig};
+use linear_moe::coordinator::moe_ep::{ExpertWeights, MoeLayer, Strategy};
+use linear_moe::coordinator::pipeline::PipelineModel;
+use linear_moe::coordinator::sp::{GateKind, SpExecutor, SpMode};
+use linear_moe::coordinator::{checkpoint, optimizer};
+use linear_moe::data;
+use linear_moe::rng::Rng;
+use linear_moe::runtime::Runtime;
+use linear_moe::tensor::{Bundle, Tensor};
+
+const DIR: &str = "artifacts";
+
+fn batch_fn(vocab: usize, b: usize) -> BatchFn {
+    Arc::new(move |idx: usize, n: usize| {
+        let mut lm = data::ZipfLm::new(vocab, 1000 + idx as u64);
+        let batch = data::batch_from_stream(&mut lm, b, n);
+        (batch.tokens, batch.targets)
+    })
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol + tol * x.abs().max(y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+// -------------------------------------------------------------------------
+// LASP sequence parallelism == serial execution (paper Alg. 1/2), and
+// LASP-1 (ring) == LASP-2 (all-gather).
+// -------------------------------------------------------------------------
+#[test]
+fn lasp_sp_equals_serial_and_modes_agree() {
+    // serial reference: run the same chunks through sp_state/sp_output on
+    // one rank, folding prefixes locally.
+    let rt = Runtime::new(DIR).unwrap();
+    for kind in [GateKind::None, GateKind::Scalar, GateKind::Vector] {
+        let ex = SpExecutor::new(&rt, kind).unwrap();
+        let spec = rt.manifest.artifact(&format!("sp_state_{}", kind.tag())).unwrap();
+        let kshape = spec.args[0].shape.clone(); // (B,H,C,Dk)
+        let (b, h, c, dk) = (kshape[0], kshape[1], kshape[2], kshape[3]);
+        let t_world = 4usize;
+        let mut rng = Rng::new(42);
+        let mk = |rng: &mut Rng, shape: &[usize], scale: f32| {
+            Tensor::f32(shape, (0..shape.iter().product::<usize>())
+                .map(|_| rng.normal() * scale).collect())
+        };
+        // full sequence split into t_world rank chunks
+        let chunks: Vec<(Tensor, Tensor, Tensor, Option<Tensor>)> = (0..t_world)
+            .map(|_| {
+                let q = mk(&mut rng, &[b, h, c, dk], 0.5);
+                let k = mk(&mut rng, &[b, h, c, dk], 0.5);
+                let v = mk(&mut rng, &[b, h, c, dk], 0.5);
+                let g = match kind {
+                    GateKind::None => None,
+                    GateKind::Scalar => Some(Tensor::f32(
+                        &[b, h, c],
+                        (0..b * h * c).map(|_| 0.8 + 0.2 * rng.f32()).collect(),
+                    )),
+                    GateKind::Vector => Some(Tensor::f32(
+                        &[b, h, c, dk],
+                        (0..b * h * c * dk)
+                            .map(|_| (-0.25 * rng.f32()).exp())
+                            .collect(),
+                    )),
+                };
+                (q, k, v, g)
+            })
+            .collect();
+
+        // serial: fold prefix across chunks on one rank
+        let mut serial_out = Vec::new();
+        {
+            let mut prefix = Tensor::zeros(&[b, h, dk, dk]);
+            let state_exe = rt.load(&format!("sp_state_{}", kind.tag())).unwrap();
+            let out_exe = rt.load(&format!("sp_output_{}", kind.tag())).unwrap();
+            for (q, k, v, g) in &chunks {
+                let o = match g {
+                    None => out_exe.run(&[q, k, v, &prefix]).unwrap(),
+                    Some(g) => out_exe.run(&[q, k, v, g, &prefix]).unwrap(),
+                };
+                serial_out.push(o[0].clone());
+                let st = match g {
+                    None => state_exe.run(&[k, v]).unwrap(),
+                    Some(g) => state_exe.run(&[k, v, g]).unwrap(),
+                };
+                linear_moe::coordinator::sp::fold_state(&mut prefix, &st[0], &st[1])
+                    .unwrap();
+            }
+        }
+        let _ = ex;
+
+        // parallel: t_world worker threads, both modes
+        for mode in [SpMode::Lasp2AllGather, SpMode::Lasp1Ring] {
+            let (_comm, handles) = Comm::new(t_world);
+            let mut joins = Vec::new();
+            for (rank, hdl) in handles.into_iter().enumerate() {
+                let (q, k, v, g) = chunks[rank].clone();
+                joins.push(std::thread::spawn(move || {
+                    let rt = Runtime::new(DIR).unwrap();
+                    let ex = SpExecutor::new(&rt, kind).unwrap();
+                    ex.run(&hdl, mode, &q, &k, &v, g.as_ref()).unwrap()
+                }));
+            }
+            let outs: Vec<Tensor> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+            for (rank, o) in outs.iter().enumerate() {
+                close(
+                    o.as_f32().unwrap(),
+                    serial_out[rank].as_f32().unwrap(),
+                    2e-4,
+                    &format!("{kind:?} {mode:?} rank {rank}"),
+                );
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// LASP-2 communication volume is independent of sequence length (the
+// paper's §2.2.1 claim: one d x d state per rank, nothing else).
+// -------------------------------------------------------------------------
+#[test]
+fn lasp2_comm_volume_independent_of_chunk_content() {
+    let rt = Runtime::new(DIR).unwrap();
+    let spec = rt.manifest.artifact("sp_state_none").unwrap();
+    let kshape = spec.args[0].shape.clone();
+    let (b, h, c, dk) = (kshape[0], kshape[1], kshape[2], kshape[3]);
+    drop(rt);
+    let t_world = 4;
+    let (comm, handles) = Comm::new(t_world);
+    let mut joins = Vec::new();
+    for hdl in handles {
+        joins.push(std::thread::spawn(move || {
+            let rt = Runtime::new(DIR).unwrap();
+            let ex = SpExecutor::new(&rt, GateKind::None).unwrap();
+            let mut rng = Rng::new(7 + hdl.rank as u64);
+            let mk = |rng: &mut Rng, shape: &[usize]| {
+                Tensor::f32(shape, (0..shape.iter().product::<usize>())
+                    .map(|_| rng.normal()).collect())
+            };
+            let q = mk(&mut rng, &[b, h, c, dk]);
+            let k = mk(&mut rng, &[b, h, c, dk]);
+            let v = mk(&mut rng, &[b, h, c, dk]);
+            ex.run(&hdl, SpMode::Lasp2AllGather, &q, &k, &v, None).unwrap();
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let (ag, _, _, _) = comm.traffic();
+    // each rank contributes exactly (state + log_decay) floats
+    let per_rank = (b * h * dk * dk + b * h * dk) * 4;
+    assert_eq!(ag as usize, per_rank * t_world,
+               "LASP-2 volume must be exactly one packed state per rank");
+}
+
+// -------------------------------------------------------------------------
+// DDP + ZeRO-1 == single-worker training on the same global batch.
+// -------------------------------------------------------------------------
+#[test]
+fn ddp_matches_single_worker() {
+    let vocab = 2048;
+    let steps = 3;
+    let dp = 2;
+    let bf = batch_fn(vocab, 2);
+    let ddp = run_ddp(
+        &DdpConfig {
+            artifacts_dir: DIR.into(),
+            tag: "tiny_gla".into(),
+            batch: 2,
+            seq: 128,
+            dp,
+            lr: 1e-3,
+            steps,
+            seed: 0,
+        },
+        bf.clone(),
+    )
+    .unwrap();
+    // single worker with grad accumulation = dp over the same micro-batches
+    let single = run_single(DIR, "tiny_gla", 2, 128, 1e-3, steps, bf, dp).unwrap();
+    for (a, b) in ddp.losses.iter().zip(&single.losses) {
+        assert!((a - b).abs() < 1e-4, "loss mismatch {a} vs {b}");
+    }
+    let (pa, _) = ddp.params.unwrap().flatten_f32().unwrap();
+    let (pb, _) = single.params.unwrap().flatten_f32().unwrap();
+    close(&pa, &pb, 1e-4, "ddp-vs-single params");
+    assert!(ddp.traffic.0 > 0, "DDP must move gradient bytes");
+}
+
+// -------------------------------------------------------------------------
+// Pipeline stage composition == monolithic fwd_bwd artifact.
+// -------------------------------------------------------------------------
+#[test]
+fn pipeline_composition_matches_monolith() {
+    let rt = Runtime::new(DIR).unwrap();
+    let tag = "tiny_gla";
+    let var = rt.manifest.variant(tag).unwrap().clone();
+    let params = rt.init_params(tag, 0).unwrap();
+
+    // split the flat bundle into embed / final_norm / per-layer bundles
+    // using manifest param paths.
+    let specs = &var.param_specs;
+    let mut embed = None;
+    let mut final_norm = None;
+    let mut layers: Vec<Vec<Tensor>> = vec![Vec::new(); var.config.n_layers];
+    for (spec, t) in specs.iter().zip(&params.tensors) {
+        if spec.path.contains("embed") {
+            embed = Some(t.clone());
+        } else if spec.path.contains("final_norm") {
+            final_norm = Some(t.clone());
+        } else {
+            // path like ['layers'][i][...]
+            let idx: usize = spec
+                .path
+                .split("['layers'][")
+                .nth(1)
+                .and_then(|s| s.split(']').next())
+                .and_then(|s| s.parse().ok())
+                .expect("layer index");
+            layers[idx].push(t.clone());
+        }
+    }
+    let embed = embed.unwrap();
+    let final_norm = final_norm.unwrap();
+    let layer_bundles: Vec<Bundle> = layers.into_iter().map(Bundle::new).collect();
+
+    let mut lm = data::ZipfLm::new(var.config.vocab, 5);
+    let batch = data::batch_from_stream(&mut lm, 1, 128);
+
+    let pm = PipelineModel::new(&rt, tag, &var.config.layout, 1, 128).unwrap();
+    let (ce_pipe, layer_grads, g_embed, g_fn) = pm
+        .fwd_bwd(&embed, &final_norm, &layer_bundles, &batch.tokens, &batch.targets)
+        .unwrap();
+
+    // monolith
+    let exe = rt.load("fwd_bwd_tiny_gla_b1n128").unwrap();
+    let out = exe
+        .run_bundled(&[&params], &[&batch.tokens, &batch.targets])
+        .unwrap();
+    let ce_mono = out[1].item_f32().unwrap();
+    assert!((ce_pipe - ce_mono).abs() < 1e-4, "{ce_pipe} vs {ce_mono}");
+    let grads = &out[2..2 + params.tensors.len()];
+
+    // compare grads leaf by leaf using the same path split
+    let mut gi = 0usize;
+    let mut layer_leaf = vec![0usize; var.config.n_layers];
+    for spec in specs.iter() {
+        let got: &Tensor;
+        if spec.path.contains("embed") {
+            got = &g_embed;
+        } else if spec.path.contains("final_norm") {
+            got = &g_fn;
+        } else {
+            let idx: usize = spec
+                .path
+                .split("['layers'][")
+                .nth(1)
+                .and_then(|s| s.split(']').next())
+                .and_then(|s| s.parse().ok())
+                .unwrap();
+            got = &layer_grads[idx].tensors[layer_leaf[idx]];
+            layer_leaf[idx] += 1;
+        }
+        close(
+            got.as_f32().unwrap(),
+            grads[gi].as_f32().unwrap(),
+            3e-3,
+            &format!("grad {}", spec.path),
+        );
+        gi += 1;
+    }
+}
+
+// -------------------------------------------------------------------------
+// MoE execution strategies agree and differ in launch count.
+// -------------------------------------------------------------------------
+#[test]
+fn moe_strategies_agree_numerically() {
+    let rt = Runtime::new(DIR).unwrap();
+    let layer = MoeLayer::new(&rt, "tiny").unwrap();
+    let mut rng = Rng::new(11);
+    let weights = ExpertWeights::random(&mut rng, layer.n_experts, layer.d, 128);
+    let spec = rt.manifest.artifact("moe_router_tiny").unwrap();
+    let t = spec.args[1].shape[0];
+    let router_w = Tensor::f32(
+        &[layer.d, layer.n_experts],
+        (0..layer.d * layer.n_experts).map(|_| rng.normal() * 0.02).collect(),
+    );
+    let x = Tensor::f32(
+        &[t, layer.d],
+        (0..t * layer.d).map(|_| rng.normal() * 0.5).collect(),
+    );
+    let (y_loop, counts, l_loop) = layer
+        .forward_local(Strategy::Loop, &router_w, &weights, &x)
+        .unwrap();
+    let (y_grp, _, l_grp) = layer
+        .forward_local(Strategy::Grouped, &router_w, &weights, &x)
+        .unwrap();
+    let (y_mb, _, l_mb) = layer
+        .forward_local(Strategy::MegaBlocks, &router_w, &weights, &x)
+        .unwrap();
+    close(y_loop.as_f32().unwrap(), y_grp.as_f32().unwrap(), 1e-4, "loop-vs-grouped");
+    close(y_loop.as_f32().unwrap(), y_mb.as_f32().unwrap(), 1e-4, "loop-vs-megablocks");
+    assert_eq!(l_loop, layer.n_experts);
+    assert_eq!(l_grp, 1);
+    // exact-fit tiles: sum of ceil(count/tile)
+    let want_mb: usize = counts.iter().map(|&c| c.div_ceil(layer.tile)).sum();
+    assert_eq!(l_mb, want_mb);
+}
+
+// -------------------------------------------------------------------------
+// HLO Adam == Rust Adam.
+// -------------------------------------------------------------------------
+#[test]
+fn hlo_adam_matches_rust_adam() {
+    let rt = Runtime::new(DIR).unwrap();
+    let hlo = optimizer::HloAdam::new(&rt, 4096).unwrap();
+    let n = 6000; // crosses a bucket boundary
+    let mut rng = Rng::new(3);
+    let mut p1: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let mut m1 = vec![0f32; n];
+    let mut v1 = vec![0f32; n];
+    let mut p2 = p1.clone();
+    let mut m2 = m1.clone();
+    let mut v2 = v1.clone();
+    for step in 1..=3 {
+        optimizer::adam_step_flat(&mut p1, &g, &mut m1, &mut v1, step, 1e-2);
+        hlo.step_flat(&mut p2, &g, &mut m2, &mut v2, step, 1e-2).unwrap();
+    }
+    close(&p1, &p2, 1e-5, "adam params");
+    close(&m1, &m2, 1e-6, "adam m");
+    close(&v1, &v2, 1e-6, "adam v");
+}
+
+// -------------------------------------------------------------------------
+// Checkpoint roundtrip through a real parameter bundle + resume.
+// -------------------------------------------------------------------------
+#[test]
+fn checkpoint_roundtrip_with_real_params() {
+    let rt = Runtime::new(DIR).unwrap();
+    let params = rt.init_params("tiny_bla", 0).unwrap();
+    let dir = std::env::temp_dir().join("lmoe_int_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.ckpt");
+    checkpoint::save(&path, &[("params", &params)]).unwrap();
+    let loaded = checkpoint::load(&path).unwrap();
+    assert_eq!(loaded[0].1.numel(), params.numel());
+    let (a, _) = params.flatten_f32().unwrap();
+    let (b, _) = loaded[0].1.flatten_f32().unwrap();
+    assert_eq!(a, b);
+}
+
+// -------------------------------------------------------------------------
+// Variable-length handling (paper §2.2.4): packed batches train on more
+// real tokens than padded batches for the same compute shape.
+// -------------------------------------------------------------------------
+#[test]
+fn packing_yields_more_real_tokens_and_finite_loss() {
+    let rt = Runtime::new(DIR).unwrap();
+    let exe = rt.load("eval_loss_tiny_gla_b2n128").unwrap();
+    let params = rt.init_params("tiny_gla", 0).unwrap();
+    let mut lm = data::ZipfLm::new(2048, 9);
+    let mut rng = Rng::new(10);
+    let lens = data::sample_doc_lengths(&mut rng, 32, 40, 128);
+    let docs: Vec<Vec<i32>> = lens.iter().map(|&l| lm.document(l)).collect();
+    let padded = data::batch_padded(&docs, 2, 128, 0);
+    let (packed, _) = data::batch_packed(&docs, 2, 128);
+    assert!(packed.real_tokens > padded.real_tokens);
+    for b in [&padded, &packed] {
+        let out = exe.run_bundled(&[&params], &[&b.tokens, &b.targets]).unwrap();
+        let ce = out[1].item_f32().unwrap();
+        assert!(ce.is_finite() && ce > 0.0);
+    }
+}
