@@ -21,7 +21,7 @@ fn main() {
                         for _ in 0..iters {
                             match op.as_str() {
                                 "all_gather" => {
-                                    h.all_gather(Tensor::zeros(&[numel]));
+                                    h.all_gather(Tensor::zeros(&[numel])).unwrap();
                                 }
                                 "all_reduce" => {
                                     h.all_reduce_sum(Tensor::zeros(&[numel])).unwrap();

@@ -11,14 +11,76 @@
 //! Synchronization: a generation-counted exchange board (deposit slots +
 //! condvar).  All ranks must issue collectives in the same program order
 //! (standard SPMD contract).
+//!
+//! Fault tolerance: every collective carries a configurable deadline
+//! (`CommCfg::timeout`).  A rank that waits past its deadline **poisons**
+//! the board and returns [`CommError::Timeout`]; every peer's pending or
+//! subsequent collective then fails fast with [`CommError::PeerFailed`]
+//! instead of hanging forever.  A [`FaultPlan`](crate::fault::FaultPlan)
+//! threaded into every `CommHandle` lets tests and the `--fault` CLI flag
+//! inject rank kills, stragglers, and dropped ring messages
+//! deterministically.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::fault::{Fault, FaultPlan};
 use crate::tensor::Tensor;
+
+/// Default collective deadline.  Generous for in-process transports; the
+/// CLI / tests lower it via [`CommCfg`].
+pub const DEFAULT_COMM_TIMEOUT: Duration = Duration::from_secs(30);
+
+// ---------------------------------------------------------------------------
+// Typed communication errors.
+// ---------------------------------------------------------------------------
+
+/// Why a collective failed.  `anyhow`-compatible, so coordinator code can
+/// `?` it while supervisors downcast to decide on recovery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// This rank waited past its configured deadline.  The board has been
+    /// poisoned on this rank's behalf so peers fail fast.
+    Timeout { op: &'static str, rank: usize, waited_ms: u64 },
+    /// Rank `rank` declared the group failed (it timed out, was killed by
+    /// an injected fault, or panicked inside a collective).
+    PeerFailed { rank: usize },
+    /// This rank already poisoned the group; further ops are rejected.
+    Poisoned,
+    /// Ring channel disconnected: the neighbour thread exited.
+    Disconnected { op: &'static str },
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Timeout { op, rank, waited_ms } => {
+                write!(f, "collective {op} timed out on rank {rank} after {waited_ms} ms")
+            }
+            CommError::PeerFailed { rank } => {
+                write!(f, "collective aborted: rank {rank} failed")
+            }
+            CommError::Poisoned => write!(f, "communicator is poisoned"),
+            CommError::Disconnected { op } => {
+                write!(f, "{op}: ring neighbour disconnected")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+fn poison_err(self_rank: usize, by: usize) -> CommError {
+    if by == self_rank {
+        CommError::Poisoned
+    } else {
+        CommError::PeerFailed { rank: by }
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Generic rendezvous board.
@@ -29,6 +91,8 @@ struct BoardState<T> {
     filled: usize,
     drained: usize,
     vals: Vec<Option<Arc<T>>>,
+    /// Some(rank) once rank has declared the group failed.
+    poisoned: Option<usize>,
 }
 
 pub struct Exchange<T> {
@@ -45,19 +109,75 @@ impl<T> Exchange<T> {
                 filled: 0,
                 drained: 0,
                 vals: (0..world).map(|_| None).collect(),
+                poisoned: None,
             }),
             cv: Condvar::new(),
             world,
         }
     }
 
-    /// Deposit this rank's value; block until every rank has deposited;
-    /// return all values (rank order).  Reusable across rounds.
-    pub fn exchange(&self, rank: usize, val: T) -> Vec<Arc<T>> {
+    /// Declare the group failed on behalf of `rank`: wake every waiter and
+    /// make all pending and future exchanges fail fast.  First writer wins.
+    pub fn poison(&self, rank: usize) {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned.is_none() {
+            st.poisoned = Some(rank);
+        }
+        self.cv.notify_all();
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.state.lock().unwrap().poisoned.is_some()
+    }
+
+    fn wait_or_deadline<'a>(
+        &self,
+        st: MutexGuard<'a, BoardState<T>>,
+        deadline: Instant,
+        rank: usize,
+        op: &'static str,
+        timeout: Duration,
+    ) -> Result<MutexGuard<'a, BoardState<T>>, CommError> {
+        let now = Instant::now();
+        if now >= deadline {
+            let mut st = st;
+            if st.poisoned.is_none() {
+                st.poisoned = Some(rank);
+            }
+            self.cv.notify_all();
+            return Err(CommError::Timeout {
+                op,
+                rank,
+                waited_ms: timeout.as_millis() as u64,
+            });
+        }
+        let (st, _timed_out) = self.cv.wait_timeout(st, deadline - now).unwrap();
+        Ok(st)
+    }
+
+    /// Deposit this rank's value; block until every rank has deposited or
+    /// `timeout` elapses; return all values (rank order).  Reusable across
+    /// rounds.  On deadline the caller poisons the board (peers fail fast
+    /// with `PeerFailed`); on an already-poisoned board the op is rejected
+    /// immediately.
+    pub fn exchange_deadline(
+        &self,
+        rank: usize,
+        val: T,
+        timeout: Duration,
+        op: &'static str,
+    ) -> Result<Vec<Arc<T>>, CommError> {
+        let deadline = Instant::now() + timeout;
         let mut st = self.state.lock().unwrap();
         // Wait for our slot from the previous round to be fully drained.
-        while st.vals[rank].is_some() {
-            st = self.cv.wait(st).unwrap();
+        loop {
+            if let Some(by) = st.poisoned {
+                return Err(poison_err(rank, by));
+            }
+            if st.vals[rank].is_none() {
+                break;
+            }
+            st = self.wait_or_deadline(st, deadline, rank, op, timeout)?;
         }
         st.vals[rank] = Some(Arc::new(val));
         st.filled += 1;
@@ -65,8 +185,15 @@ impl<T> Exchange<T> {
         if st.filled == self.world {
             self.cv.notify_all();
         }
+        // Wait until every rank of this generation has deposited.
         while st.gen == my_gen && st.filled < self.world {
-            st = self.cv.wait(st).unwrap();
+            if let Some(by) = st.poisoned {
+                return Err(poison_err(rank, by));
+            }
+            st = self.wait_or_deadline(st, deadline, rank, op, timeout)?;
+        }
+        if let Some(by) = st.poisoned {
+            return Err(poison_err(rank, by));
         }
         let out: Vec<Arc<T>> = st.vals.iter().map(|v| v.clone().unwrap()).collect();
         st.drained += 1;
@@ -79,13 +206,53 @@ impl<T> Exchange<T> {
             st.gen += 1;
             self.cv.notify_all();
         }
-        out
+        Ok(out)
+    }
+
+    /// Back-compat convenience with the default deadline.
+    pub fn exchange(&self, rank: usize, val: T) -> Result<Vec<Arc<T>>, CommError> {
+        self.exchange_deadline(rank, val, DEFAULT_COMM_TIMEOUT, "exchange")
     }
 }
 
 // ---------------------------------------------------------------------------
 // Process group.
 // ---------------------------------------------------------------------------
+
+/// Communicator configuration: collective deadline + fault-injection plan.
+#[derive(Clone)]
+pub struct CommCfg {
+    pub timeout: Duration,
+    pub faults: Arc<FaultPlan>,
+}
+
+impl Default for CommCfg {
+    fn default() -> Self {
+        CommCfg { timeout: DEFAULT_COMM_TIMEOUT, faults: Arc::new(FaultPlan::none()) }
+    }
+}
+
+/// Counters for observed / injected failures (group-wide totals).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommFaultStats {
+    pub timeouts: u64,
+    pub peer_failures: u64,
+    pub injected_kills: u64,
+    pub injected_delays: u64,
+    pub dropped_ring: u64,
+}
+
+impl CommFaultStats {
+    /// Accumulate another group's counters (the resilient trainer builds a
+    /// fresh communicator per attempt and sums their stats).
+    pub fn merge(&mut self, o: CommFaultStats) {
+        self.timeouts += o.timeouts;
+        self.peer_failures += o.peer_failures;
+        self.injected_kills += o.injected_kills;
+        self.injected_delays += o.injected_delays;
+        self.dropped_ring += o.dropped_ring;
+    }
+}
 
 struct Shared {
     board: Exchange<Tensor>,
@@ -96,6 +263,12 @@ struct Shared {
     bytes_rs: AtomicU64,
     bytes_p2p: AtomicU64,
     bytes_a2a: AtomicU64,
+    // fault observability
+    timeouts: AtomicU64,
+    peer_failures: AtomicU64,
+    injected_kills: AtomicU64,
+    injected_delays: AtomicU64,
+    dropped_ring: AtomicU64,
 }
 
 /// A communicator over `world` ranks.  Clone-free: call `handles()` once
@@ -111,10 +284,19 @@ pub struct CommHandle {
     shared: Arc<Shared>,
     ring_tx: Sender<Tensor>,
     ring_rx: Mutex<Receiver<Tensor>>,
+    timeout: Duration,
+    faults: Arc<FaultPlan>,
+    /// current training step, set by the worker loop so faults addressed
+    /// by (rank, step) can match
+    step: AtomicU64,
 }
 
 impl Comm {
     pub fn new(world: usize) -> (Comm, Vec<CommHandle>) {
+        Comm::new_with(world, CommCfg::default())
+    }
+
+    pub fn new_with(world: usize, cfg: CommCfg) -> (Comm, Vec<CommHandle>) {
         let shared = Arc::new(Shared {
             board: Exchange::new(world),
             board_multi: Exchange::new(world),
@@ -122,6 +304,11 @@ impl Comm {
             bytes_rs: AtomicU64::new(0),
             bytes_p2p: AtomicU64::new(0),
             bytes_a2a: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            peer_failures: AtomicU64::new(0),
+            injected_kills: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+            dropped_ring: AtomicU64::new(0),
         });
         // ring edges: rank i sends to (i+1) % world
         let mut txs = Vec::with_capacity(world);
@@ -141,6 +328,9 @@ impl Comm {
                 shared: shared.clone(),
                 ring_tx: txs[(rank + 1) % world].clone(),
                 ring_rx: Mutex::new(rxs[rank].take().unwrap()),
+                timeout: cfg.timeout,
+                faults: cfg.faults.clone(),
+                step: AtomicU64::new(0),
             });
         }
         (Comm { world, shared }, handles)
@@ -159,20 +349,93 @@ impl Comm {
             self.shared.bytes_a2a.load(Ordering::Relaxed),
         )
     }
+
+    /// Failure counters accumulated by the group's handles.
+    pub fn fault_stats(&self) -> CommFaultStats {
+        CommFaultStats {
+            timeouts: self.shared.timeouts.load(Ordering::Relaxed),
+            peer_failures: self.shared.peer_failures.load(Ordering::Relaxed),
+            injected_kills: self.shared.injected_kills.load(Ordering::Relaxed),
+            injected_delays: self.shared.injected_delays.load(Ordering::Relaxed),
+            dropped_ring: self.shared.dropped_ring.load(Ordering::Relaxed),
+        }
+    }
+
+    /// True once any rank has poisoned either exchange board.
+    pub fn is_poisoned(&self) -> bool {
+        self.shared.board.is_poisoned() || self.shared.board_multi.is_poisoned()
+    }
 }
 
 impl CommHandle {
-    pub fn barrier(&self) {
-        self.shared.board.exchange(self.rank, Tensor::scalar_i32(0));
+    /// Record the current training step so (rank, step)-addressed faults
+    /// can match.  Called once per step by worker loops.
+    pub fn set_step(&self, step: usize) {
+        self.step.store(step as u64, Ordering::Relaxed);
+    }
+
+    pub fn cur_step(&self) -> usize {
+        self.step.load(Ordering::Relaxed) as usize
+    }
+
+    /// Consult the fault plan on entry to a collective.  Delays sleep here;
+    /// kills poison both boards (so peers fail fast with `PeerFailed`)
+    /// and then panic, modelling a hard rank death.
+    fn preflight(&self, op: &'static str) {
+        match self.faults.take_collective(self.rank, self.cur_step()) {
+            Some(Fault::DelayCollective { ms, .. }) => {
+                self.shared.injected_delays.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            Some(Fault::KillRank { rank, step }) => {
+                self.shared.injected_kills.fetch_add(1, Ordering::Relaxed);
+                self.shared.board.poison(rank);
+                self.shared.board_multi.poison(rank);
+                panic!("injected fault: kill rank {rank} at step {step} (in {op})");
+            }
+            _ => {}
+        }
+    }
+
+    fn record_err(&self, e: &CommError) {
+        match e {
+            CommError::Timeout { .. } => {
+                self.shared.timeouts.fetch_add(1, Ordering::Relaxed);
+            }
+            CommError::PeerFailed { .. } => {
+                self.shared.peer_failures.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+    }
+
+    fn board_exchange(
+        &self,
+        val: Tensor,
+        op: &'static str,
+    ) -> Result<Vec<Arc<Tensor>>, CommError> {
+        self.preflight(op);
+        self.shared
+            .board
+            .exchange_deadline(self.rank, val, self.timeout, op)
+            .map_err(|e| {
+                self.record_err(&e);
+                e
+            })
+    }
+
+    pub fn barrier(&self) -> Result<(), CommError> {
+        self.board_exchange(Tensor::scalar_i32(0), "barrier")?;
+        Ok(())
     }
 
     /// All-gather: returns every rank's tensor in rank order.  This is the
     /// LASP-2 primitive (paper §2.2.1): one collective on the memory state.
-    pub fn all_gather(&self, local: Tensor) -> Vec<Arc<Tensor>> {
+    pub fn all_gather(&self, local: Tensor) -> Result<Vec<Arc<Tensor>>, CommError> {
         self.shared
             .bytes_ag
             .fetch_add(local.size_bytes() as u64, Ordering::Relaxed);
-        self.shared.board.exchange(self.rank, local)
+        self.board_exchange(local, "all_gather")
     }
 
     /// Reduce-scatter (sum): every rank contributes a full-length tensor,
@@ -185,7 +448,7 @@ impl CommHandle {
             .bytes_rs
             .fetch_add(local.size_bytes() as u64, Ordering::Relaxed);
         let shard = n / self.world;
-        let all = self.shared.board.exchange(self.rank, local);
+        let all = self.board_exchange(local, "reduce_scatter")?;
         let lo = self.rank * shard;
         let mut out = vec![0f32; shard];
         for t in &all {
@@ -201,7 +464,7 @@ impl CommHandle {
     /// functionally the AG+RS decomposition of paper §A.2.
     pub fn all_reduce_sum(&self, local: Tensor) -> Result<Tensor> {
         let shape = local.shape.clone();
-        let all = self.all_gather(local);
+        let all = self.all_gather(local)?;
         let mut out = vec![0f32; shape.iter().product()];
         for t in &all {
             let v = t.as_f32()?;
@@ -213,34 +476,59 @@ impl CommHandle {
     }
 
     /// Broadcast from `root`.
-    pub fn broadcast(&self, root: usize, local: Tensor) -> Arc<Tensor> {
-        let all = self.shared.board.exchange(self.rank, local);
-        all[root].clone()
+    pub fn broadcast(&self, root: usize, local: Tensor) -> Result<Arc<Tensor>, CommError> {
+        let all = self.board_exchange(local, "broadcast")?;
+        Ok(all[root].clone())
     }
 
     /// Ring point-to-point: send to (rank+1) % world, receive from
     /// (rank-1) % world.  This is LASP-1's communication pattern.
     pub fn ring_shift(&self, send: Tensor) -> Result<Tensor> {
-        self.shared
-            .bytes_p2p
-            .fetch_add(send.size_bytes() as u64, Ordering::Relaxed);
-        self.ring_tx.send(send)?;
-        Ok(self.ring_rx.lock().unwrap().recv()?)
+        self.ring_send(send)?;
+        self.ring_recv()
     }
 
     /// Asynchronous ring send to (rank+1) % world (used by the LASP-1
     /// sequential prefix chain, where only a neighbour pair synchronizes).
+    /// An injected `DropRing` fault discards the message (the receiver's
+    /// deadline then fires).
     pub fn ring_send(&self, send: Tensor) -> Result<()> {
+        self.preflight("ring_send");
+        if self.faults.take_drop_ring(self.rank, self.cur_step()).is_some() {
+            self.shared.dropped_ring.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
         self.shared
             .bytes_p2p
             .fetch_add(send.size_bytes() as u64, Ordering::Relaxed);
-        self.ring_tx.send(send)?;
+        self.ring_tx
+            .send(send)
+            .map_err(|_| CommError::Disconnected { op: "ring_send" })?;
         Ok(())
     }
 
-    /// Blocking ring receive from (rank-1) % world.
+    /// Ring receive from (rank-1) % world with the configured deadline.
+    /// A deadline poisons the boards (the ring and board collectives share
+    /// fate: a dead neighbour breaks both).
     pub fn ring_recv(&self) -> Result<Tensor> {
-        Ok(self.ring_rx.lock().unwrap().recv()?)
+        self.preflight("ring_recv");
+        match self.ring_rx.lock().unwrap().recv_timeout(self.timeout) {
+            Ok(t) => Ok(t),
+            Err(RecvTimeoutError::Timeout) => {
+                let e = CommError::Timeout {
+                    op: "ring_recv",
+                    rank: self.rank,
+                    waited_ms: self.timeout.as_millis() as u64,
+                };
+                self.record_err(&e);
+                self.shared.board.poison(self.rank);
+                self.shared.board_multi.poison(self.rank);
+                Err(e.into())
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(CommError::Disconnected { op: "ring_recv" }.into())
+            }
+        }
     }
 
     /// All-to-all: `parts[d]` goes to rank d; returns what every rank sent
@@ -251,7 +539,15 @@ impl CommHandle {
         self.shared
             .bytes_a2a
             .fetch_add(bytes as u64, Ordering::Relaxed);
-        let all = self.shared.board_multi.exchange(self.rank, parts);
+        self.preflight("all_to_all");
+        let all = self
+            .shared
+            .board_multi
+            .exchange_deadline(self.rank, parts, self.timeout, "all_to_all")
+            .map_err(|e| {
+                self.record_err(&e);
+                e
+            })?;
         Ok(all.iter().map(|v| v[self.rank].clone()).collect())
     }
 }
@@ -282,7 +578,7 @@ mod tests {
     fn all_gather_orders_by_rank() {
         let outs = run_world(4, |h| {
             let t = Tensor::f32(&[2], vec![h.rank as f32, 1.0]);
-            let all = h.all_gather(t);
+            let all = h.all_gather(t).unwrap();
             all.iter().map(|t| t.as_f32().unwrap()[0]).collect::<Vec<_>>()
         });
         for o in outs {
@@ -355,9 +651,94 @@ mod tests {
             }
             acc
         });
-        let want: f32 = (0..50).map(|r| (0 + 1 + 2 + 3 + 4 * r) as f32).sum();
+        let want: f32 = (0..50).map(|r| (6 + 4 * r) as f32).sum();
         for o in outs {
             assert_eq!(o, want);
         }
+    }
+
+    #[test]
+    fn timeout_fires_when_peer_never_arrives() {
+        let cfg = CommCfg { timeout: Duration::from_millis(50), ..Default::default() };
+        let (comm, mut handles) = Comm::new_with(2, cfg);
+        let h0 = handles.remove(0);
+        // rank 1 never calls the collective
+        let t0 = Instant::now();
+        let err = h0.all_gather(Tensor::scalar_f32(0.0)).unwrap_err();
+        assert!(matches!(err, CommError::Timeout { rank: 0, .. }), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not block forever");
+        assert!(comm.is_poisoned());
+        assert_eq!(comm.fault_stats().timeouts, 1);
+    }
+
+    #[test]
+    fn poisoned_board_rejects_subsequent_ops() {
+        let cfg = CommCfg { timeout: Duration::from_millis(20), ..Default::default() };
+        let (_comm, mut handles) = Comm::new_with(2, cfg);
+        let h1 = handles.remove(1);
+        let h0 = handles.remove(0);
+        let _ = h0.all_gather(Tensor::scalar_f32(0.0)).unwrap_err(); // poisons
+        // the late peer is told rank 0 failed, immediately
+        let t0 = Instant::now();
+        let err = h1.all_gather(Tensor::scalar_f32(1.0)).unwrap_err();
+        assert_eq!(err, CommError::PeerFailed { rank: 0 });
+        assert!(t0.elapsed() < Duration::from_millis(20));
+        // and the poisoner itself is told the group is dead
+        let err = h0.barrier().unwrap_err();
+        assert_eq!(err, CommError::Poisoned);
+    }
+
+    #[test]
+    fn injected_delay_slows_but_completes() {
+        let faults = Arc::new(FaultPlan::parse("delay:rank=0,step=0,ms=30").unwrap());
+        let cfg = CommCfg { timeout: Duration::from_secs(5), faults };
+        let (comm, handles) = Comm::new_with(2, cfg);
+        let t0 = Instant::now();
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| thread::spawn(move || h.all_reduce_sum(Tensor::scalar_f32(1.0)).unwrap()))
+            .collect();
+        for j in joins {
+            assert_eq!(j.join().unwrap().item_f32().unwrap(), 2.0);
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        assert_eq!(comm.fault_stats().injected_delays, 1);
+    }
+
+    #[test]
+    fn injected_kill_panics_rank_and_fails_peers_fast() {
+        let faults = Arc::new(FaultPlan::parse("kill:rank=1,step=0").unwrap());
+        let cfg = CommCfg { timeout: Duration::from_secs(30), faults };
+        let (comm, handles) = Comm::new_with(2, cfg);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| thread::spawn(move || h.all_gather(Tensor::scalar_f32(0.0)).map(|_| ())))
+            .collect();
+        let t0 = Instant::now();
+        let results: Vec<_> = joins.into_iter().map(|j| j.join()).collect();
+        // rank 0: clean CommError; rank 1: panicked
+        assert_eq!(
+            results[0].as_ref().unwrap().unwrap_err(),
+            CommError::PeerFailed { rank: 1 }
+        );
+        assert!(results[1].is_err(), "rank 1 must have panicked");
+        // peers failed fast -- nowhere near the 30 s deadline
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(comm.fault_stats().injected_kills, 1);
+    }
+
+    #[test]
+    fn dropped_ring_message_times_out_receiver() {
+        let faults = Arc::new(FaultPlan::parse("drop_ring:rank=0,step=0").unwrap());
+        let cfg = CommCfg { timeout: Duration::from_millis(50), faults };
+        let (comm, mut handles) = Comm::new_with(2, cfg);
+        let h1 = handles.remove(1);
+        let h0 = handles.remove(0);
+        h0.ring_send(Tensor::scalar_f32(7.0)).unwrap(); // dropped
+        let err = h1.ring_recv().unwrap_err();
+        let ce = err.downcast_ref::<CommError>().unwrap();
+        assert!(matches!(ce, CommError::Timeout { op: "ring_recv", rank: 1, .. }), "{ce}");
+        assert_eq!(comm.fault_stats().dropped_ring, 1);
+        assert!(comm.is_poisoned());
     }
 }

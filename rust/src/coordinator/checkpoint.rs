@@ -1,94 +1,247 @@
 //! Binary checkpointing for parameter / optimizer-state bundles.
 //!
-//! Format (little-endian):
-//!   magic "LMOE" | version u32 | n_tensors u32 |
-//!   per tensor: dtype u8 (0=f32, 1=i32) | ndim u32 | dims u64* | data
+//! Format v2 (little-endian):
+//!   magic "LMOE" | version u32 = 2 | n_bundles u32 |
+//!   per bundle: name_len u32 | name | n_tensors u32 |
+//!     per tensor: dtype u8 (0=f32, 1=i32) | ndim u32 | dims u64* | data |
+//!   crc32 u32   -- IEEE CRC-32 over every preceding byte (magic included)
 //!
-//! Deterministic, self-describing, resumable mid-run; the `train`
-//! subcommand writes one every --save-every steps.
+//! Hardening (this is the recovery root of the fault-tolerant trainer, so
+//! it must survive exactly the crashes it exists to fix):
+//!  - **atomic writes**: serialize to a buffer, write to a temp file in the
+//!    same directory, fsync, then rename over the target -- a crash mid-save
+//!    can never leave a half-written checkpoint under the real name;
+//!  - **integrity**: the CRC-32 trailer rejects truncated and bit-flipped
+//!    files instead of misparsing them;
+//!  - **allocation caps**: every declared count/shape is validated against
+//!    hard caps and the actual remaining file size before `Vec` allocation,
+//!    so a garbage header errors instead of attempting a multi-GiB alloc;
+//!  - **rotation + fallback**: [`save_rotating`] keeps the previous good
+//!    file as `<path>.prev`; [`load_with_fallback`] transparently falls
+//!    back to it when the primary is corrupt.
+//!
+//! v1 files (no CRC) remain readable; the caps apply to them too.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use crate::fault::{Fault, FaultPlan};
 use crate::tensor::{Bundle, Data, Tensor};
 
 const MAGIC: &[u8; 4] = b"LMOE";
-const VERSION: u32 = 1;
+const V1: u32 = 1;
+const VERSION: u32 = 2;
 
-pub fn save(path: impl AsRef<Path>, bundles: &[(&str, &Bundle)]) -> Result<()> {
-    let f = File::create(path.as_ref())
-        .with_context(|| format!("creating {:?}", path.as_ref()))?;
-    let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(bundles.len() as u32).to_le_bytes())?;
+/// Caps on header-declared quantities; anything larger is a corrupt or
+/// adversarial file, not a real checkpoint.
+const MAX_BUNDLES: usize = 4096;
+const MAX_NAME_LEN: usize = 4096;
+const MAX_TENSORS: usize = 1 << 20;
+const MAX_NDIM: usize = 16;
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3).  Bitwise implementation: no table, no dependency;
+// checkpoints here are small enough that throughput is irrelevant.
+// ---------------------------------------------------------------------------
+
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// `<path>.prev`: where [`save_rotating`] parks the previous good file.
+pub fn prev_path(path: impl AsRef<Path>) -> PathBuf {
+    let p = path.as_ref();
+    let mut s = p.as_os_str().to_os_string();
+    s.push(".prev");
+    PathBuf::from(s)
+}
+
+// ---------------------------------------------------------------------------
+// Save.
+// ---------------------------------------------------------------------------
+
+fn serialize(bundles: &[(&str, &Bundle)]) -> Vec<u8> {
+    let mut w: Vec<u8> = Vec::new();
+    w.extend_from_slice(MAGIC);
+    w.extend_from_slice(&VERSION.to_le_bytes());
+    w.extend_from_slice(&(bundles.len() as u32).to_le_bytes());
     for (name, b) in bundles {
         let nb = name.as_bytes();
-        w.write_all(&(nb.len() as u32).to_le_bytes())?;
-        w.write_all(nb)?;
-        w.write_all(&(b.tensors.len() as u32).to_le_bytes())?;
+        w.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        w.extend_from_slice(nb);
+        w.extend_from_slice(&(b.tensors.len() as u32).to_le_bytes());
         for t in &b.tensors {
             let dtype: u8 = if t.is_f32() { 0 } else { 1 };
-            w.write_all(&[dtype])?;
-            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            w.push(dtype);
+            w.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
             for &d in &t.shape {
-                w.write_all(&(d as u64).to_le_bytes())?;
+                w.extend_from_slice(&(d as u64).to_le_bytes());
             }
             match &t.data {
                 Data::F32(v) => {
                     for x in v {
-                        w.write_all(&x.to_le_bytes())?;
+                        w.extend_from_slice(&x.to_le_bytes());
                     }
                 }
                 Data::I32(v) => {
                     for x in v {
-                        w.write_all(&x.to_le_bytes())?;
+                        w.extend_from_slice(&x.to_le_bytes());
                     }
                 }
             }
         }
     }
+    let crc = crc32(&w);
+    w.extend_from_slice(&crc.to_le_bytes());
+    w
+}
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = {
+        let mut s = path.as_os_str().to_os_string();
+        s.push(&format!(".tmp.{}", std::process::id()));
+        PathBuf::from(s)
+    };
+    {
+        let mut f = File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
     Ok(())
 }
 
-pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, Bundle)>> {
-    let f = File::open(path.as_ref())
-        .with_context(|| format!("opening {:?}", path.as_ref()))?;
-    let mut r = BufReader::new(f);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a Linear-MoE checkpoint");
+/// Atomic, CRC-protected save (format v2).
+pub fn save(path: impl AsRef<Path>, bundles: &[(&str, &Bundle)]) -> Result<()> {
+    write_atomic(path.as_ref(), &serialize(bundles))
+}
+
+/// Save with fault injection: a pending `CorruptCheckpoint` fault flips one
+/// byte of the serialized image before it hits disk (still atomically --
+/// the corruption model is "bad disk / bad DMA", not "partial write",
+/// which `save` already cannot produce).
+pub fn save_with_faults(
+    path: impl AsRef<Path>,
+    bundles: &[(&str, &Bundle)],
+    faults: &FaultPlan,
+) -> Result<()> {
+    let mut bytes = serialize(bundles);
+    if let Some(Fault::CorruptCheckpoint { offset }) = faults.take_corrupt_ckpt() {
+        let i = offset % bytes.len();
+        bytes[i] ^= 0xFF;
     }
-    let version = read_u32(&mut r)?;
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
+    write_atomic(path.as_ref(), &bytes)
+}
+
+/// Rotate-then-save: the existing file (if any) becomes `<path>.prev`, so
+/// one good generation always survives a corrupted write.
+pub fn save_rotating(
+    path: impl AsRef<Path>,
+    bundles: &[(&str, &Bundle)],
+    faults: &FaultPlan,
+) -> Result<()> {
+    let path = path.as_ref();
+    if path.exists() {
+        std::fs::rename(path, prev_path(path))
+            .with_context(|| format!("rotating {path:?}"))?;
     }
-    let n_bundles = read_u32(&mut r)? as usize;
+    save_with_faults(path, bundles, faults)
+}
+
+// ---------------------------------------------------------------------------
+// Load.
+// ---------------------------------------------------------------------------
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.buf.len() - self.pos,
+            "checkpoint truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+fn parse_body(cur: &mut Cur) -> Result<Vec<(String, Bundle)>> {
+    let n_bundles = cur.u32()? as usize;
+    ensure!(n_bundles <= MAX_BUNDLES, "implausible bundle count {n_bundles}");
     let mut out = Vec::with_capacity(n_bundles);
     for _ in 0..n_bundles {
-        let name_len = read_u32(&mut r)? as usize;
-        let mut name = vec![0u8; name_len];
-        r.read_exact(&mut name)?;
-        let n_tensors = read_u32(&mut r)? as usize;
-        let mut tensors = Vec::with_capacity(n_tensors);
+        let name_len = cur.u32()? as usize;
+        ensure!(name_len <= MAX_NAME_LEN, "implausible name length {name_len}");
+        let name = String::from_utf8(cur.take(name_len)?.to_vec())
+            .context("bundle name is not UTF-8")?;
+        let n_tensors = cur.u32()? as usize;
+        ensure!(n_tensors <= MAX_TENSORS, "implausible tensor count {n_tensors}");
+        // with_capacity is safe here: n_tensors is capped and each tensor
+        // needs >= 6 header bytes, checked against the file as we go
+        let mut tensors = Vec::with_capacity(n_tensors.min(cur.remaining() / 6 + 1));
         for _ in 0..n_tensors {
-            let mut dtype = [0u8; 1];
-            r.read_exact(&mut dtype)?;
-            let ndim = read_u32(&mut r)? as usize;
+            let dtype = cur.u8()?;
+            let ndim = cur.u32()? as usize;
+            ensure!(ndim <= MAX_NDIM, "implausible rank {ndim}");
             let mut shape = Vec::with_capacity(ndim);
+            let mut numel: usize = 1;
             for _ in 0..ndim {
-                let mut b = [0u8; 8];
-                r.read_exact(&mut b)?;
-                shape.push(u64::from_le_bytes(b) as usize);
+                let d = cur.u64()?;
+                let d = usize::try_from(d)
+                    .with_context(|| format!("dim {d} overflows usize"))?;
+                numel = numel
+                    .checked_mul(d)
+                    .with_context(|| format!("shape {shape:?} x {d} overflows"))?;
+                shape.push(d);
             }
-            let numel: usize = shape.iter().product();
-            let mut raw = vec![0u8; numel * 4];
-            r.read_exact(&mut raw)?;
-            let t = match dtype[0] {
+            // the data must actually be present before we allocate for it
+            let nbytes = numel
+                .checked_mul(4)
+                .context("tensor byte size overflows")?;
+            ensure!(
+                nbytes <= cur.remaining(),
+                "tensor claims {nbytes} bytes but only {} remain (corrupt header?)",
+                cur.remaining()
+            );
+            let raw = cur.take(nbytes)?;
+            let t = match dtype {
                 0 => Tensor::f32(
                     &shape,
                     raw.chunks_exact(4)
@@ -105,31 +258,93 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, Bundle)>> {
             };
             tensors.push(t);
         }
-        out.push((String::from_utf8(name)?, Bundle::new(tensors)));
+        out.push((name, Bundle::new(tensors)));
     }
+    ensure!(cur.remaining() == 0, "{} trailing bytes after last bundle", cur.remaining());
     Ok(out)
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<(String, Bundle)>> {
+    let path = path.as_ref();
+    let buf = std::fs::read(path).with_context(|| format!("opening {path:?}"))?;
+    let mut cur = Cur { buf: &buf, pos: 0 };
+    let magic = cur.take(4)?;
+    if magic != MAGIC {
+        bail!("not a Linear-MoE checkpoint");
+    }
+    let version = cur.u32()?;
+    match version {
+        V1 => parse_body(&mut cur),
+        VERSION => {
+            ensure!(buf.len() >= 12, "checkpoint truncated before CRC trailer");
+            let body = &buf[..buf.len() - 4];
+            let stored = u32::from_le_bytes([
+                buf[buf.len() - 4],
+                buf[buf.len() - 3],
+                buf[buf.len() - 2],
+                buf[buf.len() - 1],
+            ]);
+            let actual = crc32(body);
+            ensure!(
+                stored == actual,
+                "checkpoint CRC mismatch (stored {stored:#010x}, computed {actual:#010x}): \
+                 file is truncated or corrupt"
+            );
+            let mut cur = Cur { buf: body, pos: 8 }; // past magic + version
+            parse_body(&mut cur)
+        }
+        v => bail!("unsupported checkpoint version {v}"),
+    }
+}
+
+/// Load `path`, falling back to `<path>.prev` if the primary is missing or
+/// corrupt.  Returns the bundles and whether the fallback was used.
+pub fn load_with_fallback(path: impl AsRef<Path>) -> Result<(Vec<(String, Bundle)>, bool)> {
+    let path = path.as_ref();
+    match load(path) {
+        Ok(b) => Ok((b, false)),
+        Err(primary) => {
+            let prev = prev_path(path);
+            match load(&prev) {
+                Ok(b) => Ok((b, true)),
+                Err(fallback) => bail!(
+                    "checkpoint {path:?} unusable ({primary:#}) and fallback {prev:?} \
+                     unusable ({fallback:#})"
+                ),
+            }
+        }
+    }
+}
+
+/// Pull one bundle out by name (order-independent lookup).
+pub fn take_bundle(bundles: &mut Vec<(String, Bundle)>, name: &str) -> Option<Bundle> {
+    let i = bundles.iter().position(|(n, _)| n == name)?;
+    Some(bundles.remove(i).1)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn roundtrip() {
-        let dir = std::env::temp_dir().join("lmoe_ckpt_test");
+    fn tdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("lmoe_ckpt_test").join(name);
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("test.ckpt");
+        dir
+    }
+
+    fn sample() -> (Bundle, Bundle) {
         let params = Bundle::new(vec![
             Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]),
             Tensor::i32(&[2], vec![7, 8]),
         ]);
         let opt = Bundle::new(vec![Tensor::f32(&[4], vec![0.1, 0.2, 0.3, 0.4])]);
+        (params, opt)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tdir("roundtrip").join("test.ckpt");
+        let (params, opt) = sample();
         save(&path, &[("params", &params), ("opt_m", &opt)]).unwrap();
         let loaded = load(&path).unwrap();
         assert_eq!(loaded.len(), 2);
@@ -140,10 +355,155 @@ mod tests {
 
     #[test]
     fn rejects_garbage() {
-        let dir = std::env::temp_dir().join("lmoe_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("garbage.ckpt");
+        let path = tdir("garbage").join("garbage.ckpt");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let path = tdir("trunc").join("t.ckpt");
+        let (params, _) = sample();
+        save(&path, &[("params", &params)]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [bytes.len() - 1, bytes.len() - 5, bytes.len() / 2, 9] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(load(&path).is_err(), "truncation at {cut} must be rejected");
+        }
+    }
+
+    #[test]
+    fn rejects_bit_flip_via_crc() {
+        let path = tdir("flip").join("t.ckpt");
+        let (params, _) = sample();
+        save(&path, &[("params", &params)]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // flip one payload byte (past the 12-byte header)
+        for i in [12usize, bytes.len() / 2, bytes.len() - 6] {
+            let mut b = bytes.clone();
+            b[i] ^= 0x01;
+            std::fs::write(&path, &b).unwrap();
+            let err = load(&path).unwrap_err().to_string();
+            assert!(err.contains("CRC"), "byte {i}: expected CRC error, got {err}");
+        }
+    }
+
+    #[test]
+    fn reads_v1_files() {
+        // handcraft a v1 file: no CRC trailer
+        let path = tdir("v1").join("old.ckpt");
+        let mut w: Vec<u8> = Vec::new();
+        w.extend_from_slice(MAGIC);
+        w.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        w.extend_from_slice(&1u32.to_le_bytes()); // 1 bundle
+        w.extend_from_slice(&6u32.to_le_bytes());
+        w.extend_from_slice(b"params");
+        w.extend_from_slice(&1u32.to_le_bytes()); // 1 tensor
+        w.push(0); // f32
+        w.extend_from_slice(&1u32.to_le_bytes()); // ndim 1
+        w.extend_from_slice(&2u64.to_le_bytes()); // dim 2
+        w.extend_from_slice(&1.5f32.to_le_bytes());
+        w.extend_from_slice(&(-2.5f32).to_le_bytes());
+        std::fs::write(&path, &w).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded[0].0, "params");
+        assert_eq!(loaded[0].1.tensors[0], Tensor::f32(&[2], vec![1.5, -2.5]));
+    }
+
+    #[test]
+    fn rejects_adversarial_header_without_allocating() {
+        // v1 header declaring a ~4 EiB tensor: must error, not OOM
+        let path = tdir("adversarial").join("evil.ckpt");
+        let mut w: Vec<u8> = Vec::new();
+        w.extend_from_slice(MAGIC);
+        w.extend_from_slice(&1u32.to_le_bytes());
+        w.extend_from_slice(&1u32.to_le_bytes());
+        w.extend_from_slice(&1u32.to_le_bytes());
+        w.push(b'p');
+        w.extend_from_slice(&1u32.to_le_bytes());
+        w.push(0);
+        w.extend_from_slice(&1u32.to_le_bytes());
+        w.extend_from_slice(&(1u64 << 60).to_le_bytes());
+        std::fs::write(&path, &w).unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(load(&path).is_err());
+        assert!(t0.elapsed() < std::time::Duration::from_secs(1));
+
+        // absurd counts are rejected by caps, not trusted by with_capacity
+        for (field, val) in [(8usize, u32::MAX), (12 + 5, u32::MAX)] {
+            let path = tdir("adversarial").join(format!("evil{field}.ckpt"));
+            let mut w: Vec<u8> = Vec::new();
+            w.extend_from_slice(MAGIC);
+            w.extend_from_slice(&1u32.to_le_bytes());
+            w.extend_from_slice(&1u32.to_le_bytes()); // n_bundles
+            w.extend_from_slice(&1u32.to_le_bytes()); // name_len
+            w.push(b'p');
+            w.extend_from_slice(&1u32.to_le_bytes()); // n_tensors
+            w[field..field + 4].copy_from_slice(&val.to_le_bytes());
+            std::fs::write(&path, &w).unwrap();
+            assert!(load(&path).is_err());
+        }
+    }
+
+    #[test]
+    fn rotation_and_fallback() {
+        let dir = tdir("rotate");
+        let path = dir.join("m.ckpt");
+        let (a, b) = sample();
+        let none = FaultPlan::none();
+        save_rotating(&path, &[("params", &a)], &none).unwrap();
+        save_rotating(&path, &[("params", &b)], &none).unwrap();
+        assert!(prev_path(&path).exists());
+        // pristine primary: no fallback
+        let (loaded, used_prev) = load_with_fallback(&path).unwrap();
+        assert!(!used_prev);
+        assert_eq!(loaded[0].1.tensors, b.tensors);
+        // corrupt primary: fall back to prev (= first generation)
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let (loaded, used_prev) = load_with_fallback(&path).unwrap();
+        assert!(used_prev);
+        assert_eq!(loaded[0].1.tensors, a.tensors);
+    }
+
+    #[test]
+    fn injected_corruption_is_caught_by_crc() {
+        let path = tdir("inject").join("m.ckpt");
+        let (a, _) = sample();
+        let faults = FaultPlan::parse("corrupt_ckpt:offset=17").unwrap();
+        save_with_faults(&path, &[("params", &a)], &faults).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC") || err.contains("truncated"), "{err}");
+        // one-shot: the next save is clean
+        save_with_faults(&path, &[("params", &a)], &faults).unwrap();
+        assert!(load(&path).is_ok());
+    }
+
+    #[test]
+    fn no_tmp_files_left_behind() {
+        let dir = tdir("atomic");
+        let path = dir.join("m.ckpt");
+        let (a, _) = sample();
+        save(&path, &[("params", &a)]).unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+    }
+
+    #[test]
+    fn take_bundle_by_name() {
+        let (a, b) = sample();
+        let path = tdir("take").join("m.ckpt");
+        save(&path, &[("opt_m", &b), ("params", &a)]).unwrap();
+        let mut loaded = load(&path).unwrap();
+        let p = take_bundle(&mut loaded, "params").unwrap();
+        assert_eq!(p.tensors, a.tensors);
+        assert!(take_bundle(&mut loaded, "params").is_none());
+        assert!(take_bundle(&mut loaded, "opt_m").is_some());
     }
 }

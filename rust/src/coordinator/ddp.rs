@@ -8,17 +8,32 @@
 //!      parameter vector, then shards are all-gathered back.
 //!
 //! Equivalence to single-worker training on the concatenated batch is an
-//! integration test (rust/tests/distributed.rs), up to the loss-mean vs
+//! integration test (rust/tests/integration.rs), up to the loss-mean vs
 //! grad-mean ordering which is exact here because every micro-batch has
 //! the same token count.
+//!
+//! Fault tolerance: [`run_ddp_resilient`] supervises the worker threads.
+//! Worker panics (including injected rank kills) are caught at join and
+//! mapped to errors; surviving ranks' collectives fail fast via the
+//! poisoned board instead of hanging.  The supervisor then rolls every
+//! rank back to the last good checkpoint (params + full ZeRO-1 optimizer
+//! state + step counter, CRC-verified with previous-good fallback),
+//! rebuilds the communicator, and resumes -- up to `max_restarts` times
+//! with exponential backoff.  Because checkpoints capture the *entire*
+//! training state and batches are addressed by step index, a recovered
+//! run reproduces the uninterrupted run's losses exactly.
 
-use std::sync::Arc;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use crate::collectives::{Comm, CommHandle};
+use crate::collectives::{Comm, CommCfg, CommFaultStats, CommHandle};
 use crate::coordinator::optimizer::DistributedOptimizer;
+use crate::coordinator::{checkpoint, metrics};
+use crate::fault::FaultPlan;
 use crate::runtime::Runtime;
 use crate::tensor::{Bundle, Tensor};
 
@@ -41,11 +56,33 @@ pub struct DdpReport {
     /// (all-gather bytes, reduce-scatter bytes)
     pub traffic: (u64, u64),
     pub tokens_per_sec: f64,
+    /// checkpoint-rollback recoveries performed (resilient runner only)
+    pub recoveries: usize,
+    /// human-readable fault / recovery log, in order
+    pub fault_events: Vec<String>,
+    /// per-rank heartbeats + comm fault counters (resilient runner only)
+    pub health: Option<metrics::HealthSnapshot>,
 }
 
 /// Batches are produced by a caller-supplied generator so tests can feed
 /// identical data to DDP and single-worker baselines.
 pub type BatchFn = Arc<dyn Fn(usize, usize) -> (Tensor, Tensor) + Send + Sync>;
+
+/// Join a worker, mapping a panic (rank death) to an error carrying the
+/// rank id -- the supervisor treats both failure modes uniformly.
+fn join_worker<T>(rank: usize, j: thread::JoinHandle<Result<T>>) -> Result<T> {
+    match j.join() {
+        Ok(r) => r.with_context(|| format!("rank {rank} failed")),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            Err(anyhow::anyhow!("rank {rank} panicked: {msg}"))
+        }
+    }
+}
 
 pub fn run_ddp(cfg: &DdpConfig, batch_fn: BatchFn) -> Result<DdpReport> {
     let (comm, handles) = Comm::new(cfg.dp);
@@ -60,10 +97,17 @@ pub fn run_ddp(cfg: &DdpConfig, batch_fn: BatchFn) -> Result<DdpReport> {
         }));
     }
     let t0 = std::time::Instant::now();
+    // Join *all* workers before propagating any failure, so no thread is
+    // left detached; then surface the first rank error with its rank id.
+    let results: Vec<Result<(Vec<f32>, Option<Bundle>)>> = joins
+        .into_iter()
+        .enumerate()
+        .map(|(rank, j)| join_worker(rank, j))
+        .collect();
     let mut losses = Vec::new();
     let mut params = None;
-    for (rank, j) in joins.into_iter().enumerate() {
-        let (l, p) = j.join().expect("worker panicked")?;
+    for (rank, r) in results.into_iter().enumerate() {
+        let (l, p) = r?;
         if rank == 0 {
             losses = l;
             params = p;
@@ -76,6 +120,7 @@ pub fn run_ddp(cfg: &DdpConfig, batch_fn: BatchFn) -> Result<DdpReport> {
         params,
         traffic: (ag, rs),
         tokens_per_sec: (cfg.batch * cfg.seq * cfg.steps) as f64 / dt,
+        ..Default::default()
     })
 }
 
@@ -101,6 +146,7 @@ fn worker(
 
     let mut losses = Vec::with_capacity(steps);
     for step in 0..steps {
+        comm.set_step(step);
         // global batch index -> this worker's micro-batch
         let (tokens, targets) = batch_fn(step * dp + rank, seq);
         let out = exe.run_bundled(&[&params], &[&tokens, &targets])?;
@@ -124,10 +170,327 @@ fn worker(
         losses.push(loss_mean);
 
         opt.step_and_allgather(&comm, &mut params, &grads, lr)?;
-        let _ = step;
     }
     let out_params = if rank == 0 { Some(params) } else { None };
     Ok((losses, out_params))
+}
+
+// ---------------------------------------------------------------------------
+// Resilient DDP: supervised workers + checkpoint rollback.
+// ---------------------------------------------------------------------------
+
+/// One rank's model, abstracted from PJRT so the recovery machinery is
+/// testable without artifacts: forward+backward on one micro-batch.
+pub trait RankModel {
+    fn fwd_bwd(
+        &mut self,
+        params: &Bundle,
+        tokens: &Tensor,
+        targets: &Tensor,
+    ) -> Result<(f32, Bundle)>;
+}
+
+/// Per-worker constructor, called *inside* the worker thread (PJRT
+/// runtimes are not `Send`).  Returns the rank's model and its initial
+/// parameter replica, which must be identical across ranks.
+pub type ModelFactory =
+    Arc<dyn Fn(usize) -> Result<(Box<dyn RankModel>, Bundle)> + Send + Sync>;
+
+/// The production model: the `fwd_bwd_*` HLO artifact behind [`RankModel`].
+struct PjrtModel {
+    // keeps the PJRT client alive for as long as the executable runs
+    _rt: Runtime,
+    exe: std::rc::Rc<crate::runtime::Executable>,
+    n_params: usize,
+}
+
+impl RankModel for PjrtModel {
+    fn fwd_bwd(
+        &mut self,
+        params: &Bundle,
+        tokens: &Tensor,
+        targets: &Tensor,
+    ) -> Result<(f32, Bundle)> {
+        let out = self.exe.run_bundled(&[params], &[tokens, targets])?;
+        let loss = out[0].item_f32()?;
+        Ok((loss, Bundle::new(out[2..2 + self.n_params].to_vec())))
+    }
+}
+
+pub fn pjrt_model_factory(
+    artifacts_dir: &str,
+    tag: &str,
+    batch: usize,
+    seq: usize,
+) -> ModelFactory {
+    let dir = artifacts_dir.to_string();
+    let tag = tag.to_string();
+    Arc::new(move |_rank| {
+        let rt = Runtime::new(&dir)?;
+        let exe = rt.load(&format!("fwd_bwd_{tag}_b{batch}n{seq}"))?;
+        let params = rt.init_params(&tag, 0)?;
+        let n_params = params.tensors.len();
+        Ok((
+            Box::new(PjrtModel { _rt: rt, exe, n_params }) as Box<dyn RankModel>,
+            params,
+        ))
+    })
+}
+
+/// Configuration of the supervised, checkpoint-rollback trainer.
+pub struct ResilientCfg {
+    pub dp: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub lr: f32,
+    pub steps: usize,
+    /// checkpoint cadence in steps (0 disables checkpointing; recovery
+    /// then restarts from step 0)
+    pub save_every: usize,
+    /// how many times a failed attempt may be restarted
+    pub max_restarts: usize,
+    /// per-collective deadline for the DP group
+    pub comm_timeout: Duration,
+    /// base supervisor backoff; doubles per consecutive restart
+    pub backoff: Duration,
+    pub ckpt_path: PathBuf,
+    pub faults: Arc<FaultPlan>,
+}
+
+/// Full training state captured by a checkpoint: enough to make a
+/// recovered run bit-identical to an uninterrupted one.
+#[derive(Clone)]
+struct ResumeState {
+    /// steps already completed (the next step to run)
+    start_step: usize,
+    params: Bundle,
+    /// full padded ZeRO-1 moment vectors (every rank re-shards its slice)
+    m: Vec<f32>,
+    v: Vec<f32>,
+    opt_step: i32,
+}
+
+fn resume_from_bundles(mut bundles: Vec<(String, Bundle)>) -> Result<ResumeState> {
+    let params = checkpoint::take_bundle(&mut bundles, "params")
+        .context("checkpoint has no 'params' bundle")?;
+    let m = checkpoint::take_bundle(&mut bundles, "opt_m")
+        .context("checkpoint has no 'opt_m' bundle")?;
+    let v = checkpoint::take_bundle(&mut bundles, "opt_v")
+        .context("checkpoint has no 'opt_v' bundle")?;
+    let meta = checkpoint::take_bundle(&mut bundles, "meta")
+        .context("checkpoint has no 'meta' bundle")?;
+    let meta = meta
+        .tensors
+        .first()
+        .context("empty 'meta' bundle")?
+        .as_i32()?
+        .to_vec();
+    anyhow::ensure!(meta.len() >= 2, "'meta' bundle too short");
+    Ok(ResumeState {
+        start_step: meta[0] as usize,
+        params,
+        m: m.tensors.first().context("empty 'opt_m'")?.as_f32()?.to_vec(),
+        v: v.tensors.first().context("empty 'opt_v'")?.as_f32()?.to_vec(),
+        opt_step: meta[1],
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_resilient(
+    rank: usize,
+    cfg_dp: usize,
+    comm: CommHandle,
+    factory: ModelFactory,
+    batch_fn: BatchFn,
+    seq: usize,
+    lr: f32,
+    steps: usize,
+    save_every: usize,
+    ckpt_path: PathBuf,
+    faults: Arc<FaultPlan>,
+    resume: Option<ResumeState>,
+    health: Arc<metrics::HealthBoard>,
+    loss_sink: Arc<Mutex<Vec<f32>>>,
+) -> Result<Option<Bundle>> {
+    let (mut model, init_params) = factory(rank)?;
+    let mut params = match &resume {
+        Some(r) => r.params.clone(),
+        None => init_params,
+    };
+    let mut opt = DistributedOptimizer::new(params.numel(), cfg_dp, rank);
+    let start_step = resume.as_ref().map_or(0, |r| r.start_step);
+    if let Some(r) = &resume {
+        opt.restore_from_full(&r.m, &r.v, r.opt_step)?;
+    }
+    for step in start_step..steps {
+        comm.set_step(step);
+        health.beat(rank);
+        let (tokens, targets) = batch_fn(step * cfg_dp + rank, seq);
+        let (loss, mut grads) = model.fwd_bwd(&params, &tokens, &targets)?;
+
+        let (flat_g, _) = grads.flatten_f32()?;
+        let reduced = comm.all_reduce_sum(Tensor::f32(&[flat_g.len()], flat_g))?;
+        let mut mean_g = reduced.as_f32()?.to_vec();
+        for g in &mut mean_g {
+            *g /= cfg_dp as f32;
+        }
+        grads.unflatten_f32(&mean_g)?;
+
+        let loss_mean = comm
+            .all_reduce_sum(Tensor::scalar_f32(loss))?
+            .item_f32()?
+            / cfg_dp as f32;
+        if rank == 0 {
+            loss_sink.lock().unwrap()[step] = loss_mean;
+        }
+
+        opt.step_and_allgather(&comm, &mut params, &grads, lr)?;
+
+        if save_every > 0 && (step + 1) % save_every == 0 {
+            // Gather every rank's optimizer shard so the checkpoint holds
+            // the complete ZeRO-1 state (one packed all-gather: m ++ v).
+            let (m, v, opt_step) = opt.shard_state();
+            let mut mv = m.to_vec();
+            mv.extend_from_slice(v);
+            let all = comm.all_gather(Tensor::f32(&[mv.len()], mv))?;
+            if rank == 0 {
+                let shard = opt.shard;
+                let mut m_full = Vec::with_capacity(shard * cfg_dp);
+                let mut v_full = Vec::with_capacity(shard * cfg_dp);
+                for t in &all {
+                    let x = t.as_f32()?;
+                    m_full.extend_from_slice(&x[..shard]);
+                    v_full.extend_from_slice(&x[shard..]);
+                }
+                let mb = Bundle::new(vec![Tensor::f32(&[m_full.len()], m_full)]);
+                let vb = Bundle::new(vec![Tensor::f32(&[v_full.len()], v_full)]);
+                let meta = Bundle::new(vec![Tensor::i32(
+                    &[2],
+                    vec![(step + 1) as i32, opt_step],
+                )]);
+                checkpoint::save_rotating(
+                    &ckpt_path,
+                    &[
+                        ("params", &params),
+                        ("opt_m", &mb),
+                        ("opt_v", &vb),
+                        ("meta", &meta),
+                    ],
+                    &faults,
+                )?;
+            }
+        }
+    }
+    Ok(if rank == 0 { Some(params) } else { None })
+}
+
+/// Supervised DDP: run the ZeRO-1 data-parallel trainer under a supervisor
+/// that survives rank death.  Failures (worker panics, collective
+/// timeouts, peer failures) abort the attempt; the supervisor rolls back
+/// to the last good checkpoint, rebuilds the communicator, and retries
+/// with exponential backoff, at most `max_restarts` times.
+pub fn run_ddp_resilient(
+    cfg: &ResilientCfg,
+    factory: ModelFactory,
+    batch_fn: BatchFn,
+) -> Result<DdpReport> {
+    anyhow::ensure!(cfg.dp >= 1, "dp must be >= 1");
+    anyhow::ensure!(cfg.steps >= 1, "steps must be >= 1");
+    let health = Arc::new(metrics::HealthBoard::new(cfg.dp));
+    let loss_sink = Arc::new(Mutex::new(vec![f32::NAN; cfg.steps]));
+    let mut comm_stats = CommFaultStats::default();
+    let mut recoveries = 0usize;
+    let mut events: Vec<String> = Vec::new();
+    let mut resume: Option<ResumeState> = None;
+    let mut attempt = 0usize;
+    let t0 = Instant::now();
+    loop {
+        let comm_cfg = CommCfg { timeout: cfg.comm_timeout, faults: cfg.faults.clone() };
+        let (comm, handles) = Comm::new_with(cfg.dp, comm_cfg);
+        let mut joins = Vec::new();
+        for (rank, h) in handles.into_iter().enumerate() {
+            let factory = factory.clone();
+            let bf = batch_fn.clone();
+            let (dp, seq, lr, steps, save_every) =
+                (cfg.dp, cfg.seq, cfg.lr, cfg.steps, cfg.save_every);
+            let ckpt = cfg.ckpt_path.clone();
+            let faults = cfg.faults.clone();
+            let res = resume.clone();
+            let health = health.clone();
+            let sink = loss_sink.clone();
+            joins.push(thread::spawn(move || -> Result<Option<Bundle>> {
+                worker_resilient(
+                    rank, dp, h, factory, bf, seq, lr, steps, save_every, ckpt,
+                    faults, res, health, sink,
+                )
+            }));
+        }
+        let results: Vec<Result<Option<Bundle>>> = joins
+            .into_iter()
+            .enumerate()
+            .map(|(rank, j)| join_worker(rank, j))
+            .collect();
+        comm_stats.merge(comm.fault_stats());
+
+        let first_err = results.iter().position(|r| r.is_err());
+        match first_err {
+            None => {
+                let params = results.into_iter().next().unwrap().unwrap();
+                let dt = t0.elapsed().as_secs_f64();
+                let (ag, rs, _, _) = comm.traffic();
+                let losses = loss_sink.lock().unwrap().clone();
+                return Ok(DdpReport {
+                    losses,
+                    params,
+                    traffic: (ag, rs),
+                    tokens_per_sec: (cfg.batch * cfg.seq * cfg.steps) as f64 / dt,
+                    recoveries,
+                    fault_events: events,
+                    health: Some(health.snapshot(comm_stats)),
+                });
+            }
+            Some(rank) => {
+                attempt += 1;
+                let err = results.into_iter().nth(rank).unwrap().unwrap_err();
+                events.push(format!("attempt {attempt}: {err:#}"));
+                if attempt > cfg.max_restarts {
+                    return Err(err.context(format!(
+                        "giving up after {} restarts (max_restarts)",
+                        cfg.max_restarts
+                    )));
+                }
+                if !cfg.backoff.is_zero() {
+                    // exponential backoff, capped at 2^10 x base
+                    let exp = (attempt - 1).min(10) as u32;
+                    thread::sleep(cfg.backoff * 2u32.pow(exp));
+                }
+                // Roll back to the last good checkpoint (or step 0 if none
+                // was written yet).  `load_with_fallback` transparently
+                // uses `<path>.prev` when the newest file is corrupt.
+                resume = match checkpoint::load_with_fallback(&cfg.ckpt_path) {
+                    Ok((bundles, used_prev)) => {
+                        let r = resume_from_bundles(bundles)?;
+                        events.push(format!(
+                            "recovery {}: rolled back to step {}{}",
+                            recoveries + 1,
+                            r.start_step,
+                            if used_prev { " (previous-good checkpoint)" } else { "" },
+                        ));
+                        Some(r)
+                    }
+                    Err(_) => {
+                        events.push(format!(
+                            "recovery {}: no usable checkpoint, restarting from step 0",
+                            recoveries + 1
+                        ));
+                        None
+                    }
+                };
+                recoveries += 1;
+                health.record_restart();
+            }
+        }
+    }
 }
 
 /// Single-worker trainer over the fused `train_step_*` artifact (fwd +
@@ -172,6 +535,7 @@ pub fn run_fused(
         params: Some(params),
         traffic: (0, 0),
         tokens_per_sec: (batch * seq * steps) as f64 / dt,
+        ..Default::default()
     })
 }
 
@@ -219,5 +583,6 @@ pub fn run_single(
         params: Some(params),
         traffic: (0, 0),
         tokens_per_sec: (batch * seq * steps * grad_accum) as f64 / dt,
+        ..Default::default()
     })
 }

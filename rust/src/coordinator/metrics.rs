@@ -1,11 +1,69 @@
 //! Training metrics: loss-curve recording (Fig. 6/7), throughput meters
-//! (Table 3 / Fig. 4), and simple CSV output for plotting.
+//! (Table 3 / Fig. 4), simple CSV output for plotting, and the per-rank
+//! health board the fault-tolerant trainer reports recoveries through.
 
 use std::fmt::Write as _;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::Result;
+
+use crate::collectives::CommFaultStats;
+
+// ---------------------------------------------------------------------------
+// Health board: per-rank heartbeats + recovery counters, shared between the
+// resilient supervisor and its workers so liveness is observable while a
+// run is in flight (and reportable afterwards).
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+pub struct HealthBoard {
+    beats: Vec<AtomicU64>,
+    pub restarts: AtomicU64,
+}
+
+impl HealthBoard {
+    pub fn new(world: usize) -> Self {
+        HealthBoard {
+            beats: (0..world).map(|_| AtomicU64::new(0)).collect(),
+            restarts: AtomicU64::new(0),
+        }
+    }
+
+    /// One heartbeat from `rank` (called at the top of every training
+    /// step; a rank whose count stalls is hung or dead).
+    pub fn beat(&self, rank: usize) {
+        self.beats[rank].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn heartbeats(&self, rank: usize) -> u64 {
+        self.beats[rank].load(Ordering::Relaxed)
+    }
+
+    pub fn record_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Freeze the counters (plus the communicator's fault counters) into a
+    /// plain value for `DdpReport`.
+    pub fn snapshot(&self, comm: CommFaultStats) -> HealthSnapshot {
+        HealthSnapshot {
+            heartbeats: self.beats.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            restarts: self.restarts.load(Ordering::Relaxed),
+            comm,
+        }
+    }
+}
+
+/// Plain-value snapshot of `HealthBoard` + comm fault counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HealthSnapshot {
+    /// steps started per rank (across all attempts, replays included)
+    pub heartbeats: Vec<u64>,
+    pub restarts: u64,
+    pub comm: CommFaultStats,
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct LossCurve {
@@ -194,6 +252,19 @@ mod tests {
         assert!(s.starts_with("step,a,b\n"));
         assert!(s.contains("0,1.00000,2.00000"));
         assert!(s.contains("1,0.50000,"));
+    }
+
+    #[test]
+    fn health_board_counts_beats_and_restarts() {
+        let hb = HealthBoard::new(3);
+        hb.beat(0);
+        hb.beat(0);
+        hb.beat(2);
+        hb.record_restart();
+        let snap = hb.snapshot(CommFaultStats { timeouts: 1, ..Default::default() });
+        assert_eq!(snap.heartbeats, vec![2, 0, 1]);
+        assert_eq!(snap.restarts, 1);
+        assert_eq!(snap.comm.timeouts, 1);
     }
 
     #[test]

@@ -130,6 +130,28 @@ impl DistributedOptimizer {
         2 * self.shard * 4
     }
 
+    /// This rank's Adam shard (m, v) and the 1-based step counter --
+    /// checkpointed by the resilient trainer so a rollback restores the
+    /// optimizer exactly, not just the parameters.
+    pub fn shard_state(&self) -> (&[f32], &[f32], i32) {
+        (&self.state.m, &self.state.v, self.state.step)
+    }
+
+    /// Restore this rank's shard from the full padded m/v vectors of a
+    /// checkpoint (inverse of gathering `shard_state` across ranks).
+    pub fn restore_from_full(&mut self, m_full: &[f32], v_full: &[f32], step: i32) -> Result<()> {
+        anyhow::ensure!(
+            m_full.len() == self.padded && v_full.len() == self.padded,
+            "optimizer state length {} / {} != padded {} (dp changed between runs?)",
+            m_full.len(), v_full.len(), self.padded
+        );
+        let lo = self.rank_in_dp * self.shard;
+        self.state.m.copy_from_slice(&m_full[lo..lo + self.shard]);
+        self.state.v.copy_from_slice(&v_full[lo..lo + self.shard]);
+        self.state.step = step;
+        Ok(())
+    }
+
     /// One distributed step: update the local shard from the (already
     /// all-reduced) gradient, then all-gather shards into full params.
     pub fn step_and_allgather(
@@ -156,7 +178,7 @@ impl DistributedOptimizer {
         );
         // All-gather updated shards (rank order) into the full vector.
         let local = Tensor::f32(&[self.shard], flat_p[lo..hi].to_vec());
-        let all = comm.all_gather(local);
+        let all = comm.all_gather(local)?;
         let mut full = Vec::with_capacity(self.padded);
         for t in &all {
             full.extend_from_slice(t.as_f32()?);

@@ -136,7 +136,7 @@ impl SpExecutor {
                 // LASP-2: one AllGather of (contrib, log_decay); every rank
                 // folds the strict prefix locally.
                 let packed = pack_state(&mc, &ld)?;
-                let all = comm.all_gather(packed);
+                let all = comm.all_gather(packed)?;
                 let mut prefix = Tensor::zeros(&state_shape);
                 for t in all.iter().take(comm.rank) {
                     let (c, d) = unpack_state(t, &state_shape)?;
@@ -214,8 +214,8 @@ impl AttnSpExecutor {
         v_local: &Tensor,
     ) -> Result<Tensor> {
         // AllGather K and V along the sequence axis (rank order).
-        let ks = comm.all_gather(k_local.clone());
-        let vs = comm.all_gather(v_local.clone());
+        let ks = comm.all_gather(k_local.clone())?;
+        let vs = comm.all_gather(v_local.clone())?;
         let k_full = concat_seq(&ks)?;
         let v_full = concat_seq(&vs)?;
         let pos0 = Tensor::scalar_i32((comm.rank * self.chunk) as i32);

@@ -1,0 +1,249 @@
+//! Deterministic fault injection for the training system.
+//!
+//! Production MoE trainers treat rank failure, stragglers, and checkpoint
+//! corruption as first-class events; this module makes those events
+//! *reproducible* so the recovery machinery (timeout-aware collectives,
+//! `run_ddp_resilient`, checkpoint rollback) can be tested exactly the way
+//! normal numerics are.
+//!
+//! A [`FaultPlan`] is a set of one-shot faults, each addressed to a
+//! (rank, step) coordinate:
+//!  - `KillRank`: the rank panics inside its next collective at that step
+//!    (the board is poisoned first so peers fail fast instead of timing
+//!    out),
+//!  - `DelayCollective`: the rank sleeps before the collective (straggler
+//!    simulation; peers see latency, or a timeout if the delay exceeds the
+//!    deadline),
+//!  - `DropRing`: the rank's ring send at that step is silently discarded
+//!    (the receiver's `ring_recv` deadline fires),
+//!  - `CorruptCheckpoint`: flip one byte of the checkpoint file written at
+//!    that step (exercises the CRC path; applied by the checkpoint layer).
+//!
+//! Every fault fires **once** per plan instance -- after a recovery the
+//! replayed steps do not re-trigger it, which is what lets a killed run
+//! resume and complete.  Plans are built from a spec string (CLI `--fault`)
+//! or generated from a seed, so a failing scenario is a single token to
+//! reproduce.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+/// One injectable fault, addressed by rank and training step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic inside the next collective issued by `rank` at `step`.
+    KillRank { rank: usize, step: usize },
+    /// Sleep `ms` before the next collective issued by `rank` at `step`.
+    DelayCollective { rank: usize, step: usize, ms: u64 },
+    /// Silently drop the ring message sent by `rank` at `step`.
+    DropRing { rank: usize, step: usize },
+    /// Flip the byte at `offset` (mod file length) of the next checkpoint
+    /// written while the plan is active.
+    CorruptCheckpoint { offset: usize },
+}
+
+impl Fault {
+    fn coords(&self) -> Option<(usize, usize)> {
+        match *self {
+            Fault::KillRank { rank, step } => Some((rank, step)),
+            Fault::DelayCollective { rank, step, .. } => Some((rank, step)),
+            Fault::DropRing { rank, step } => Some((rank, step)),
+            Fault::CorruptCheckpoint { .. } => None,
+        }
+    }
+}
+
+/// A deterministic set of one-shot faults.  Shared (via `Arc`) between the
+/// supervisor, every `CommHandle`, and the checkpoint writer.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    fired: Vec<AtomicBool>,
+}
+
+impl FaultPlan {
+    /// The empty plan: injects nothing, costs one branch per collective.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn new(faults: Vec<Fault>) -> Self {
+        let fired = faults.iter().map(|_| AtomicBool::new(false)).collect();
+        FaultPlan { faults, fired }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Parse a `--fault` spec: semicolon-separated clauses of
+    /// `kill:rank=R,step=S` | `delay:rank=R,step=S,ms=D` |
+    /// `drop_ring:rank=R,step=S` | `corrupt_ckpt:offset=B`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut faults = Vec::new();
+        for clause in spec.split(';').filter(|c| !c.trim().is_empty()) {
+            let (kind, rest) = clause
+                .split_once(':')
+                .with_context(|| format!("fault clause {clause:?}: missing ':'"))?;
+            let mut rank = None;
+            let mut step = None;
+            let mut ms = None;
+            let mut offset = None;
+            for kv in rest.split(',').filter(|c| !c.trim().is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("fault clause {clause:?}: bad key=value {kv:?}"))?;
+                let v: u64 = v
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("fault clause {clause:?}: non-integer {kv:?}"))?;
+                match k.trim() {
+                    "rank" => rank = Some(v as usize),
+                    "step" => step = Some(v as usize),
+                    "ms" => ms = Some(v),
+                    "offset" => offset = Some(v as usize),
+                    other => bail!("fault clause {clause:?}: unknown key {other:?}"),
+                }
+            }
+            let need = |o: Option<usize>, k: &str| {
+                o.with_context(|| format!("fault clause {clause:?}: missing {k}"))
+            };
+            let fault = match kind.trim() {
+                "kill" => Fault::KillRank { rank: need(rank, "rank")?, step: need(step, "step")? },
+                "delay" => Fault::DelayCollective {
+                    rank: need(rank, "rank")?,
+                    step: need(step, "step")?,
+                    ms: ms.with_context(|| format!("fault clause {clause:?}: missing ms"))?,
+                },
+                "drop_ring" => {
+                    Fault::DropRing { rank: need(rank, "rank")?, step: need(step, "step")? }
+                }
+                "corrupt_ckpt" => Fault::CorruptCheckpoint {
+                    offset: need(offset, "offset")?,
+                },
+                other => bail!("unknown fault kind {other:?}"),
+            };
+            faults.push(fault);
+        }
+        Ok(FaultPlan::new(faults))
+    }
+
+    /// Seeded scenario generator: one kill of a random rank at a random
+    /// step in `[1, steps)`, for soak-style testing (`--fault seed=N` is
+    /// spelled by the caller; this is the library entry point).
+    pub fn random_kill(seed: u64, world: usize, steps: usize) -> Self {
+        let mut rng = crate::rng::Rng::new(seed);
+        let rank = rng.below(world.max(1));
+        let step = if steps > 1 { 1 + rng.below(steps - 1) } else { 0 };
+        FaultPlan::new(vec![Fault::KillRank { rank, step }])
+    }
+
+    /// Atomically claim the first unfired fault matching `pred`.  Returns
+    /// the fault exactly once across all threads/attempts.
+    fn take(&self, pred: impl Fn(&Fault) -> bool) -> Option<Fault> {
+        for (i, f) in self.faults.iter().enumerate() {
+            if pred(f)
+                && self.fired[i]
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                return Some(*f);
+            }
+        }
+        None
+    }
+
+    /// Claim a kill or delay addressed to (rank, step).  Called by
+    /// `CommHandle` on entry to every collective.
+    pub fn take_collective(&self, rank: usize, step: usize) -> Option<Fault> {
+        self.take(|f| {
+            matches!(f, Fault::KillRank { .. } | Fault::DelayCollective { .. })
+                && f.coords() == Some((rank, step))
+        })
+    }
+
+    /// Claim a ring-drop addressed to (rank, step).
+    pub fn take_drop_ring(&self, rank: usize, step: usize) -> Option<Fault> {
+        self.take(|f| matches!(f, Fault::DropRing { .. }) && f.coords() == Some((rank, step)))
+    }
+
+    /// Claim a checkpoint corruption (any pending one).
+    pub fn take_corrupt_ckpt(&self) -> Option<Fault> {
+        self.take(|f| matches!(f, Fault::CorruptCheckpoint { .. }))
+    }
+
+    /// Number of faults already fired (observability).
+    pub fn fired_count(&self) -> usize {
+        self.fired.iter().filter(|f| f.load(Ordering::Acquire)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlan::parse(
+            "kill:rank=1,step=5;delay:rank=0,step=3,ms=50;drop_ring:rank=2,step=4;corrupt_ckpt:offset=7",
+        )
+        .unwrap();
+        assert_eq!(
+            p.faults(),
+            &[
+                Fault::KillRank { rank: 1, step: 5 },
+                Fault::DelayCollective { rank: 0, step: 3, ms: 50 },
+                Fault::DropRing { rank: 2, step: 4 },
+                Fault::CorruptCheckpoint { offset: 7 },
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("kill").is_err());
+        assert!(FaultPlan::parse("kill:rank=1").is_err()); // missing step
+        assert!(FaultPlan::parse("explode:rank=1,step=2").is_err());
+        assert!(FaultPlan::parse("kill:rank=x,step=2").is_err());
+        assert!(FaultPlan::parse("delay:rank=0,step=1").is_err()); // missing ms
+    }
+
+    #[test]
+    fn empty_spec_is_empty_plan() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::none().is_empty());
+    }
+
+    #[test]
+    fn faults_fire_exactly_once() {
+        let p = FaultPlan::parse("kill:rank=1,step=5").unwrap();
+        assert!(p.take_collective(0, 5).is_none());
+        assert!(p.take_collective(1, 4).is_none());
+        assert_eq!(
+            p.take_collective(1, 5),
+            Some(Fault::KillRank { rank: 1, step: 5 })
+        );
+        // one-shot: replaying the same (rank, step) after recovery is clean
+        assert!(p.take_collective(1, 5).is_none());
+        assert_eq!(p.fired_count(), 1);
+    }
+
+    #[test]
+    fn random_kill_is_deterministic_and_in_range() {
+        let a = FaultPlan::random_kill(9, 4, 10);
+        let b = FaultPlan::random_kill(9, 4, 10);
+        assert_eq!(a.faults(), b.faults());
+        match a.faults()[0] {
+            Fault::KillRank { rank, step } => {
+                assert!(rank < 4);
+                assert!((1..10).contains(&step));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

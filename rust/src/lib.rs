@@ -11,6 +11,7 @@
 
 pub mod json;
 pub mod rng;
+pub mod fault;
 pub mod tensor;
 pub mod runtime;
 pub mod collectives;

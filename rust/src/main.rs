@@ -10,10 +10,13 @@
 
 use std::collections::HashMap;
 
-use anyhow::Result;
-use linear_moe::coordinator::ddp::{run_ddp, run_single, DdpConfig};
+use anyhow::{Context, Result};
+use linear_moe::coordinator::ddp::{
+    pjrt_model_factory, run_ddp_resilient, run_single, ResilientCfg,
+};
 use linear_moe::coordinator::{checkpoint, metrics};
 use linear_moe::data;
+use linear_moe::fault::FaultPlan;
 use linear_moe::inference::{greedy, LsmDecoder};
 use linear_moe::memcost;
 use linear_moe::runtime::Runtime;
@@ -60,6 +63,8 @@ fn main() -> Result<()> {
                 "linear-moe <train|infer|eval|show-config> [--flags]\n\
                  train:  --tag tiny_gla --steps 20 --lr 1e-3 --batch 2 --seq 128 \
                  [--dp N] [--grad-accum N] [--save ckpt.bin] [--curve out.csv]\n\
+                 \x20       [--save-every K] [--max-restarts N] [--comm-timeout-ms MS]\n\
+                 \x20       [--fault 'kill:rank=1,step=5;delay:rank=0,step=3,ms=50']\n\
                  infer:  --tag tiny_bla --batch 4 --len 64\n\
                  eval:   --tag tiny_gla --batch 2 --seq 128 [--batches 8]\n\
                  show-config: [--tag tiny_gla] -- print variants + memory model"
@@ -77,6 +82,15 @@ fn train(dir: &str, f: &HashMap<String, String>) -> Result<()> {
     let seq: usize = flag(f, "seq", 128);
     let dp: usize = flag(f, "dp", 1);
     let grad_accum: usize = flag(f, "grad-accum", 1);
+    let save_every: usize = flag(f, "save-every", 0);
+    let comm_timeout_ms: u64 = flag(f, "comm-timeout-ms", 30_000);
+    let max_restarts: usize = flag(f, "max-restarts", 3);
+    let faults = match f.get("fault") {
+        Some(spec) => std::sync::Arc::new(
+            FaultPlan::parse(spec).context("parsing --fault")?,
+        ),
+        None => std::sync::Arc::new(FaultPlan::none()),
+    };
 
     let rt = Runtime::new(dir)?;
     let vocab = rt.manifest.variant(&tag)?.config.vocab;
@@ -92,17 +106,25 @@ fn train(dir: &str, f: &HashMap<String, String>) -> Result<()> {
         .artifacts
         .contains_key(&format!("fwd_bwd_{tag}_b{batch}n{seq}"));
     let report = if dp > 1 {
-        run_ddp(
-            &DdpConfig {
-                artifacts_dir: dir.into(),
-                tag: tag.clone(),
+        let ckpt_path = f
+            .get("save")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::env::temp_dir().join(format!("lmoe_{tag}.ckpt")));
+        run_ddp_resilient(
+            &ResilientCfg {
+                dp,
                 batch,
                 seq,
-                dp,
                 lr,
                 steps,
-                seed: 0,
+                save_every,
+                max_restarts,
+                comm_timeout: std::time::Duration::from_millis(comm_timeout_ms),
+                backoff: std::time::Duration::from_millis(50),
+                ckpt_path,
+                faults,
             },
+            pjrt_model_factory(dir, &tag, batch, seq),
             bf,
         )?
     } else if have_fwd_bwd && grad_accum > 1 {
@@ -121,6 +143,20 @@ fn train(dir: &str, f: &HashMap<String, String>) -> Result<()> {
         "throughput: {:.0} tokens/s  (dp={dp}, traffic ag={} B rs={} B)",
         report.tokens_per_sec, report.traffic.0, report.traffic.1
     );
+    if report.recoveries > 0 {
+        println!("recoveries: {}", report.recoveries);
+        for e in &report.fault_events {
+            println!("  {e}");
+        }
+    }
+    if let Some(h) = &report.health {
+        println!(
+            "health: heartbeats {:?}  restarts {}  comm {{timeouts {} peer-failures {} \
+             kills {} delays {} dropped-ring {}}}",
+            h.heartbeats, h.restarts, h.comm.timeouts, h.comm.peer_failures,
+            h.comm.injected_kills, h.comm.injected_delays, h.comm.dropped_ring
+        );
+    }
     if let Some(path) = f.get("curve") {
         metrics::write_csv(path, &[&curve])?;
         println!("wrote {path}");
@@ -161,7 +197,9 @@ fn eval_cmd(dir: &str, f: &HashMap<String, String>) -> Result<()> {
     let batches: usize = flag(f, "batches", 8);
     let rt = Runtime::new(dir)?;
     let params = if let Some(path) = f.get("ckpt") {
-        checkpoint::load(path)?.remove(0).1
+        let mut bundles = checkpoint::load(path)?;
+        checkpoint::take_bundle(&mut bundles, "params")
+            .with_context(|| format!("checkpoint {path} has no 'params' bundle"))?
     } else {
         rt.init_params(&tag, 0)?
     };
