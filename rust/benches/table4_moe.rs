@@ -1,22 +1,205 @@
-//! Paper Table 4 (top): MoE optimization ablation.
-//! Baseline loop-over-experts vs GroupedGEMM (one batched launch) vs
-//! MegaBlocks-style exact-fit tiles (dynamic launch count, no padding).
+//! Paper Table 4 (top): MoE optimization ablation, plus the
+//! expert-parallel overlap bench.
+//!
+//! Part 1 (needs compiled artifacts): baseline loop-over-experts vs
+//! GroupedGEMM vs MegaBlocks-style exact-fit tiles on the PJRT backend.
+//! Skipped with a notice when no artifact manifest is present.
+//!
+//! Part 2 (always runs, pure-Rust reference backend): the chunked,
+//! overlapped EP pipeline vs the sequential dispatch->compute->combine
+//! baseline over ep_world ∈ {1, 2, 4}.  Per-(rank, round) expert load is
+//! deliberately imbalanced -- that is the regime where FSMoE-style
+//! pipelining pays: sequential pays the max load every round, overlapped
+//! pays each rank's own sum.  Asserts EP outputs are bit-identical to the
+//! single-rank reference and that the dispatch arena stops allocating
+//! after warmup, then records BENCH_moe_ep.json (override the path with
+//! BENCH_JSON_OUT).  EP_SMOKE=1 shrinks shapes for a CI smoke run and
+//! skips the wall-clock assertion.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
 
 use linear_moe::bench_util::bench;
+use linear_moe::collectives::Comm;
 use linear_moe::coordinator::metrics::Table;
-use linear_moe::coordinator::moe_ep::{ExpertWeights, MoeLayer, Strategy};
+use linear_moe::coordinator::moe_ep::{
+    forward_ep, forward_tokens, DispatchArena, EpCfg, ExpertWeights, MoeGeom,
+    MoeLayer, ReferenceExperts, Strategy,
+};
 use linear_moe::rng::Rng;
 use linear_moe::runtime::Runtime;
 use linear_moe::tensor::Tensor;
 
-fn main() -> anyhow::Result<()> {
-    let iters: usize = std::env::var("BENCH_ITERS").ok()
-        .and_then(|s| s.parse().ok()).unwrap_or(8);
-    let rt = Runtime::new("artifacts")?;
+struct EpShape {
+    d: usize,
+    f: usize,
+    n_experts: usize,
+    heavy: usize,
+    light: usize,
+}
+
+struct Batch {
+    geom: MoeGeom,
+    weights: ExpertWeights,
+    xv: Vec<f32>,
+    gates: Vec<f32>,
+    idx: Vec<i32>,
+    t: usize,
+}
+
+/// Routing with a deliberately imbalanced per-(rank, round) load: expert
+/// (q, c) is heavy iff (q + c) % world == 0, so with chunk=1 every round
+/// has exactly one busy rank.  Totals are world-divisible so tokens
+/// partition evenly across EP ranks.
+fn crafted_batch(rng: &mut Rng, shape: &EpShape, world: usize) -> Batch {
+    let epr = shape.n_experts / world;
+    let mut idx = Vec::new();
+    for q in 0..world {
+        for c in 0..epr {
+            let n = if (q + c) % world == 0 { shape.heavy } else { shape.light };
+            for _ in 0..n {
+                idx.push((q * epr + c) as i32);
+            }
+        }
+    }
+    let t = idx.len();
+    assert_eq!(t % world, 0, "crafted load must partition across ranks");
+    let gates: Vec<f32> = (0..t).map(|_| rng.f32()).collect();
+    let xv: Vec<f32> = (0..t * shape.d).map(|_| rng.normal()).collect();
+    let weights = ExpertWeights::random(rng, shape.n_experts, shape.d, shape.f);
+    let geom = MoeGeom {
+        d: shape.d,
+        n_experts: shape.n_experts,
+        top_k: 1,
+        cap: shape.heavy, // generous: no drops
+        tile: 8,
+    };
+    Batch { geom, weights, xv, gates, idx, t }
+}
+
+/// (rank, wall, compute, overlapped, launches, rounds, local output)
+type RankOut = (usize, Duration, Duration, Duration, usize, usize, Vec<f32>);
+
+struct EpRun {
+    ms_per_iter: f64,
+    overlap_frac: f64,
+    launches: usize,
+    a2a_bytes: u64,
+    a2a_ops: u64,
+    rounds: usize,
+}
+
+/// SPMD-run `iters` EP forwards over `world` threads, barrier-aligned, and
+/// return the slowest rank's per-iter wall clock.  Also verifies the
+/// dispatch arena allocates nothing after the warmup forward.
+fn run_ep_bench(
+    b: &Batch,
+    world: usize,
+    cfg: EpCfg,
+    iters: usize,
+) -> anyhow::Result<(EpRun, Vec<f32>)> {
+    let (t, geom) = (b.t, b.geom);
+    let t_local = t / world;
+    let backend0 = ReferenceExperts::new(b.weights.clone());
+    let (comm, handles) = Comm::new(world);
+    let shared = Arc::new((b.xv.clone(), b.gates.clone(), b.idx.clone()));
+    let joins: Vec<_> = handles
+        .into_iter()
+        .map(|h| {
+            let backend = backend0.clone();
+            let shared = shared.clone();
+            thread::spawn(move || -> anyhow::Result<RankOut> {
+                let (xv, gates, idx) = &*shared;
+                let (r, d, k) = (h.rank, geom.d, geom.top_k);
+                let x = Tensor::f32(
+                    &[t_local, d],
+                    xv[r * t_local * d..(r + 1) * t_local * d].to_vec(),
+                );
+                let g = &gates[r * t_local * k..(r + 1) * t_local * k];
+                let i = &idx[r * t_local * k..(r + 1) * t_local * k];
+                let mut arena = DispatchArena::new();
+                // warmup sizes the arena lanes
+                let (y, _) = forward_ep(&h, &backend, &cfg, &geom, g, i, &x, &mut arena)?;
+                let warm_allocs = arena.alloc_events();
+                h.barrier()?;
+                let t0 = Instant::now();
+                let mut compute = Duration::ZERO;
+                let mut overlapped = Duration::ZERO;
+                let mut launches = 0usize;
+                let mut rounds = 0usize;
+                for _ in 0..iters {
+                    let (_, s) =
+                        forward_ep(&h, &backend, &cfg, &geom, g, i, &x, &mut arena)?;
+                    compute += s.compute;
+                    overlapped += s.compute_overlapped;
+                    launches += s.launches;
+                    rounds = s.rounds;
+                }
+                h.barrier()?;
+                let dt = t0.elapsed();
+                anyhow::ensure!(
+                    arena.alloc_events() == warm_allocs,
+                    "rank {r}: dispatch arena grew after warmup \
+                     ({} -> {} alloc events)",
+                    warm_allocs,
+                    arena.alloc_events()
+                );
+                Ok((r, dt, compute, overlapped, launches, rounds, y.as_f32()?.to_vec()))
+            })
+        })
+        .collect();
+    let mut y_global = vec![0f32; t * geom.d];
+    let mut slowest = Duration::ZERO;
+    let mut compute = Duration::ZERO;
+    let mut overlapped = Duration::ZERO;
+    let mut launches = 0usize;
+    let mut rounds = 0usize;
+    for j in joins {
+        let (r, dt, c, o, l, rd, y) = j.join().expect("EP bench rank panicked")?;
+        slowest = slowest.max(dt);
+        compute += c;
+        overlapped += o;
+        launches += l;
+        rounds = rd;
+        y_global[r * t_local * geom.d..(r + 1) * t_local * geom.d].copy_from_slice(&y);
+    }
+    let traffic = comm.traffic_by_kind();
+    Ok((
+        EpRun {
+            ms_per_iter: slowest.as_secs_f64() * 1e3 / iters as f64,
+            overlap_frac: if compute.as_secs_f64() > 0.0 {
+                overlapped.as_secs_f64() / compute.as_secs_f64()
+            } else {
+                0.0
+            },
+            launches: launches / iters.max(1),
+            a2a_bytes: traffic.all_to_all_bytes,
+            a2a_ops: traffic.all_to_all_ops,
+            rounds,
+        },
+        y_global,
+    ))
+}
+
+fn part1_artifacts(iters: usize) -> anyhow::Result<()> {
+    let rt = match Runtime::new("artifacts") {
+        Ok(rt) => rt,
+        Err(_) => {
+            println!("(no artifact manifest; skipping PJRT strategy table)");
+            return Ok(());
+        }
+    };
+    let layer = match MoeLayer::new(&rt, "bench") {
+        Ok(l) => l,
+        Err(_) => {
+            println!("(no MoE bench artifacts; skipping PJRT strategy table)");
+            return Ok(());
+        }
+    };
     let mut table = Table::new(&[
         "MoE execution", "time/iter ms", "launches", "padded slots",
     ]);
-    let layer = MoeLayer::new(&rt, "bench")?;
     let mut rng = Rng::new(5);
     let f_dim = 256;
     let weights = ExpertWeights::random(&mut rng, layer.n_experts, layer.d, f_dim);
@@ -37,8 +220,12 @@ fn main() -> anyhow::Result<()> {
             Strategy::MegaBlocks => counts.iter()
                 .map(|&c| c.div_ceil(layer.tile) * layer.tile - c).sum(),
         };
+        // arena + bound backend reused across iters: steady-state timing
+        let mut arena = DispatchArena::new();
         let r = bench(name, 2, iters, || {
-            let _ = layer.forward_local(strat, &router_w, &weights, &x).unwrap();
+            let _ = layer
+                .forward_local_with(strat, &router_w, &weights, &x, &mut arena)
+                .unwrap();
         });
         table.row(&[name.to_string(), format!("{:.1}", r.mean_ms),
                     launches.to_string(), padded.to_string()]);
@@ -46,5 +233,103 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== Table 4 (top): MoE optimization ({t} tokens, {} experts) ===",
              layer.n_experts);
     table.print();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("EP_SMOKE").is_ok();
+    let iters: usize = std::env::var("BENCH_ITERS").ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 2 } else { 8 });
+
+    part1_artifacts(iters)?;
+
+    // --- Part 2: expert-parallel overlap (reference backend, no artifacts)
+    let shape = if smoke {
+        EpShape { d: 8, f: 8, n_experts: 8, heavy: 8, light: 4 }
+    } else {
+        EpShape { d: 64, f: 128, n_experts: 8, heavy: 64, light: 4 }
+    };
+    let mut rng = Rng::new(17);
+    let mut table = Table::new(&[
+        "EP config", "time/iter ms", "overlap %", "launches", "a2a MiB", "speedup",
+    ]);
+    let mut json_rows = Vec::new();
+    for world in [1usize, 2, 4] {
+        let b = crafted_batch(&mut rng, &shape, world);
+        // bit-identical reference over the concatenated batch
+        let backend = ReferenceExperts::new(b.weights.clone());
+        let mut arena = DispatchArena::new();
+        let (y_ref, _, _, _) = forward_tokens(
+            &backend, Strategy::MegaBlocks, &b.geom, &b.gates, &b.idx, &b.xv, b.t,
+            &mut arena,
+        )?;
+        let mut seq_ms = 0.0f64;
+        for overlap in [false, true] {
+            let cfg = EpCfg { strategy: Strategy::MegaBlocks, chunk: 1, overlap };
+            let (run, y_ep) = run_ep_bench(&b, world, cfg, iters)?;
+            assert_eq!(
+                y_ep, y_ref,
+                "EP output must be bit-identical to single-rank (ep={world})"
+            );
+            let mode = if overlap { "overlap" } else { "sequential" };
+            let speedup = if overlap && seq_ms > 0.0 {
+                seq_ms / run.ms_per_iter
+            } else {
+                1.0
+            };
+            if !overlap {
+                seq_ms = run.ms_per_iter;
+            }
+            table.row(&[
+                format!("ep={world} {mode} (rounds={})", run.rounds),
+                format!("{:.2}", run.ms_per_iter),
+                format!("{:.0}", 100.0 * run.overlap_frac),
+                run.launches.to_string(),
+                format!("{:.2}", run.a2a_bytes as f64 / (1024.0 * 1024.0)),
+                format!("{speedup:.2}x"),
+            ]);
+            json_rows.push(format!(
+                "    {{\"ep\": {world}, \"mode\": \"{mode}\", \"rounds\": {}, \
+                 \"ms_per_iter\": {:.4}, \"overlap_frac\": {:.4}, \
+                 \"launches\": {}, \"a2a_bytes\": {}, \"a2a_ops\": {}, \
+                 \"speedup_vs_sequential\": {:.4}}}",
+                run.rounds, run.ms_per_iter, run.overlap_frac, run.launches,
+                run.a2a_bytes, run.a2a_ops, speedup
+            ));
+            if overlap && world >= 2 {
+                assert!(
+                    run.overlap_frac > 0.0,
+                    "overlapped EP must report comm/compute overlap"
+                );
+                if !smoke {
+                    assert!(
+                        run.ms_per_iter < seq_ms * 0.95,
+                        "overlapped EP ({:.2} ms) must beat sequential \
+                         ({seq_ms:.2} ms) at ep={world}",
+                        run.ms_per_iter
+                    );
+                }
+            }
+        }
+    }
+    println!(
+        "\n=== EP overlap: chunked all-to-all + pipelined expert compute \
+         ({} experts, d={}, heavy/light {}/{}) ===",
+        shape.n_experts, shape.d, shape.heavy, shape.light
+    );
+    table.print();
+
+    let out = std::env::var("BENCH_JSON_OUT")
+        .unwrap_or_else(|_| "../BENCH_moe_ep.json".to_string());
+    let json = format!(
+        "{{\n  \"bench\": \"table4_moe_ep\",\n  \"smoke\": {smoke},\n  \
+         \"iters\": {iters},\n  \"shape\": {{\"d\": {}, \"f\": {}, \
+         \"n_experts\": {}, \"heavy\": {}, \"light\": {}}},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        shape.d, shape.f, shape.n_experts, shape.heavy, shape.light,
+        json_rows.join(",\n")
+    );
+    std::fs::write(&out, json)?;
+    println!("wrote {out}");
     Ok(())
 }

@@ -20,7 +20,17 @@
 //! threaded into every `CommHandle` lets tests and the `--fault` CLI flag
 //! inject rank kills, stragglers, and dropped ring messages
 //! deterministically.
+//!
+//! Chunked all-to-all: [`CommHandle::a2a_post`] / [`CommHandle::a2a_wait`]
+//! are the split-phase form of the EP token exchange.  Each micro-shard is
+//! posted to a *windowed* exchange board ([`WinExchange`]) under its own
+//! sequence number, so several shards can be in flight at once and a
+//! receiver can run expert compute on shard *i* while shard *i+1* is still
+//! being deposited by peers -- the FSMoE-style comm/compute overlap the
+//! MoE engine in `coordinator::moe_ep` schedules.  Deadline and poison
+//! semantics apply per shard, exactly as for the blocking collectives.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
@@ -216,6 +226,135 @@ impl<T> Exchange<T> {
 }
 
 // ---------------------------------------------------------------------------
+// Windowed rendezvous board: several generations in flight at once.
+// ---------------------------------------------------------------------------
+
+/// How many rounds may be in flight before we assume the SPMD contract was
+/// violated (ranks posting wildly different sequences).  The MoE overlap
+/// scheduler keeps at most 3 shards outstanding; 64 is a generous cap.
+const WIN_MAX_IN_FLIGHT: usize = 64;
+
+struct WinSlot<T> {
+    vals: Vec<Option<Arc<T>>>,
+    filled: usize,
+    drained: usize,
+}
+
+struct WinState<T> {
+    slots: BTreeMap<u64, WinSlot<T>>,
+    poisoned: Option<usize>,
+}
+
+/// Split-phase exchange board keyed by an explicit round number: `post` is
+/// non-blocking, `wait` blocks until every rank deposited that round.
+/// Unlike [`Exchange`], multiple rounds may be open simultaneously, which
+/// is what lets chunked all-to-all shards pipeline.  All ranks must post
+/// and wait rounds in the same order (SPMD contract); a deadline in `wait`
+/// poisons the whole board.
+pub struct WinExchange<T> {
+    state: Mutex<WinState<T>>,
+    cv: Condvar,
+    world: usize,
+}
+
+impl<T> WinExchange<T> {
+    pub fn new(world: usize) -> Self {
+        WinExchange {
+            state: Mutex::new(WinState { slots: BTreeMap::new(), poisoned: None }),
+            cv: Condvar::new(),
+            world,
+        }
+    }
+
+    /// Declare the group failed on behalf of `rank` (first writer wins).
+    pub fn poison(&self, rank: usize) {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned.is_none() {
+            st.poisoned = Some(rank);
+        }
+        self.cv.notify_all();
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.state.lock().unwrap().poisoned.is_some()
+    }
+
+    /// Deposit `rank`'s contribution to round `seq` without blocking.
+    pub fn post(&self, rank: usize, seq: u64, val: T) -> Result<(), CommError> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(by) = st.poisoned {
+            return Err(poison_err(rank, by));
+        }
+        if st.slots.len() >= WIN_MAX_IN_FLIGHT && !st.slots.contains_key(&seq) {
+            panic!(
+                "windowed exchange overflow: {} rounds in flight posting seq {seq} \
+                 (ranks issuing collectives out of SPMD order?)",
+                st.slots.len()
+            );
+        }
+        let world = self.world;
+        let slot = st.slots.entry(seq).or_insert_with(|| WinSlot {
+            vals: (0..world).map(|_| None).collect(),
+            filled: 0,
+            drained: 0,
+        });
+        assert!(
+            slot.vals[rank].is_none(),
+            "rank {rank} double-posted windowed exchange seq {seq}"
+        );
+        slot.vals[rank] = Some(Arc::new(val));
+        slot.filled += 1;
+        if slot.filled == world {
+            self.cv.notify_all();
+        }
+        Ok(())
+    }
+
+    /// Block until every rank has posted round `seq`; returns the round's
+    /// values in rank order.  On deadline the board is poisoned so peers
+    /// fail fast, mirroring [`Exchange::exchange_deadline`].
+    pub fn wait(
+        &self,
+        rank: usize,
+        seq: u64,
+        timeout: Duration,
+        op: &'static str,
+    ) -> Result<Vec<Arc<T>>, CommError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(by) = st.poisoned {
+                return Err(poison_err(rank, by));
+            }
+            if st.slots.get(&seq).is_some_and(|s| s.filled == self.world) {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                if st.poisoned.is_none() {
+                    st.poisoned = Some(rank);
+                }
+                self.cv.notify_all();
+                return Err(CommError::Timeout {
+                    op,
+                    rank,
+                    waited_ms: timeout.as_millis() as u64,
+                });
+            }
+            let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+        let slot = st.slots.get_mut(&seq).unwrap();
+        let out: Vec<Arc<T>> = slot.vals.iter().map(|v| v.clone().unwrap()).collect();
+        slot.drained += 1;
+        if slot.drained == self.world {
+            st.slots.remove(&seq);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Process group.
 // ---------------------------------------------------------------------------
 
@@ -229,6 +368,44 @@ pub struct CommCfg {
 impl Default for CommCfg {
     fn default() -> Self {
         CommCfg { timeout: DEFAULT_COMM_TIMEOUT, faults: Arc::new(FaultPlan::none()) }
+    }
+}
+
+/// Per-collective-kind traffic attribution: logical bytes and op launches
+/// for each primitive, so benches can *verify* the paper's EP
+/// communication-volume claim (tokens × d × 4 B per all-to-all direction)
+/// instead of asserting it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CommTraffic {
+    pub all_gather_bytes: u64,
+    pub all_gather_ops: u64,
+    pub reduce_scatter_bytes: u64,
+    pub reduce_scatter_ops: u64,
+    pub ring_bytes: u64,
+    pub ring_ops: u64,
+    pub all_to_all_bytes: u64,
+    pub all_to_all_ops: u64,
+}
+
+impl CommTraffic {
+    pub fn total_bytes(&self) -> u64 {
+        self.all_gather_bytes
+            + self.reduce_scatter_bytes
+            + self.ring_bytes
+            + self.all_to_all_bytes
+    }
+
+    /// Accumulate another group's counters (the resilient trainer builds a
+    /// fresh communicator per attempt and sums their traffic).
+    pub fn merge(&mut self, o: CommTraffic) {
+        self.all_gather_bytes += o.all_gather_bytes;
+        self.all_gather_ops += o.all_gather_ops;
+        self.reduce_scatter_bytes += o.reduce_scatter_bytes;
+        self.reduce_scatter_ops += o.reduce_scatter_ops;
+        self.ring_bytes += o.ring_bytes;
+        self.ring_ops += o.ring_ops;
+        self.all_to_all_bytes += o.all_to_all_bytes;
+        self.all_to_all_ops += o.all_to_all_ops;
     }
 }
 
@@ -257,12 +434,19 @@ impl CommFaultStats {
 struct Shared {
     board: Exchange<Tensor>,
     board_multi: Exchange<Vec<Tensor>>,
+    /// windowed board for the chunked (split-phase) all-to-all shards
+    win: WinExchange<Vec<Tensor>>,
     /// logical bytes moved across the group (sum over ranks of bytes each
     /// rank contributed to the wire), per op class
     bytes_ag: AtomicU64,
     bytes_rs: AtomicU64,
     bytes_p2p: AtomicU64,
     bytes_a2a: AtomicU64,
+    // per-kind op launch counts (group-wide)
+    ops_ag: AtomicU64,
+    ops_rs: AtomicU64,
+    ops_p2p: AtomicU64,
+    ops_a2a: AtomicU64,
     // fault observability
     timeouts: AtomicU64,
     peer_failures: AtomicU64,
@@ -289,6 +473,18 @@ pub struct CommHandle {
     /// current training step, set by the worker loop so faults addressed
     /// by (rank, step) can match
     step: AtomicU64,
+    /// next chunked-a2a shard sequence number (per-rank; the SPMD program
+    /// order guarantees all ranks assign identical sequences)
+    a2a_seq: AtomicU64,
+}
+
+/// Receipt for a posted all-to-all shard.  Redeem with
+/// [`CommHandle::a2a_wait`]; dropping it without waiting stalls peers
+/// until their deadline.
+#[must_use = "a posted all-to-all shard must be waited on"]
+#[derive(Debug)]
+pub struct A2aTicket {
+    seq: u64,
 }
 
 impl Comm {
@@ -300,10 +496,15 @@ impl Comm {
         let shared = Arc::new(Shared {
             board: Exchange::new(world),
             board_multi: Exchange::new(world),
+            win: WinExchange::new(world),
             bytes_ag: AtomicU64::new(0),
             bytes_rs: AtomicU64::new(0),
             bytes_p2p: AtomicU64::new(0),
             bytes_a2a: AtomicU64::new(0),
+            ops_ag: AtomicU64::new(0),
+            ops_rs: AtomicU64::new(0),
+            ops_p2p: AtomicU64::new(0),
+            ops_a2a: AtomicU64::new(0),
             timeouts: AtomicU64::new(0),
             peer_failures: AtomicU64::new(0),
             injected_kills: AtomicU64::new(0),
@@ -331,6 +532,7 @@ impl Comm {
                 timeout: cfg.timeout,
                 faults: cfg.faults.clone(),
                 step: AtomicU64::new(0),
+                a2a_seq: AtomicU64::new(0),
             });
         }
         (Comm { world, shared }, handles)
@@ -350,6 +552,11 @@ impl Comm {
         )
     }
 
+    /// Traffic attributed per collective kind (bytes + op launches).
+    pub fn traffic_by_kind(&self) -> CommTraffic {
+        self.shared.traffic_by_kind()
+    }
+
     /// Failure counters accumulated by the group's handles.
     pub fn fault_stats(&self) -> CommFaultStats {
         CommFaultStats {
@@ -361,9 +568,26 @@ impl Comm {
         }
     }
 
-    /// True once any rank has poisoned either exchange board.
+    /// True once any rank has poisoned any exchange board.
     pub fn is_poisoned(&self) -> bool {
-        self.shared.board.is_poisoned() || self.shared.board_multi.is_poisoned()
+        self.shared.board.is_poisoned()
+            || self.shared.board_multi.is_poisoned()
+            || self.shared.win.is_poisoned()
+    }
+}
+
+impl Shared {
+    fn traffic_by_kind(&self) -> CommTraffic {
+        CommTraffic {
+            all_gather_bytes: self.bytes_ag.load(Ordering::Relaxed),
+            all_gather_ops: self.ops_ag.load(Ordering::Relaxed),
+            reduce_scatter_bytes: self.bytes_rs.load(Ordering::Relaxed),
+            reduce_scatter_ops: self.ops_rs.load(Ordering::Relaxed),
+            ring_bytes: self.bytes_p2p.load(Ordering::Relaxed),
+            ring_ops: self.ops_p2p.load(Ordering::Relaxed),
+            all_to_all_bytes: self.bytes_a2a.load(Ordering::Relaxed),
+            all_to_all_ops: self.ops_a2a.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -391,6 +615,7 @@ impl CommHandle {
                 self.shared.injected_kills.fetch_add(1, Ordering::Relaxed);
                 self.shared.board.poison(rank);
                 self.shared.board_multi.poison(rank);
+                self.shared.win.poison(rank);
                 panic!("injected fault: kill rank {rank} at step {step} (in {op})");
             }
             _ => {}
@@ -435,6 +660,7 @@ impl CommHandle {
         self.shared
             .bytes_ag
             .fetch_add(local.size_bytes() as u64, Ordering::Relaxed);
+        self.shared.ops_ag.fetch_add(1, Ordering::Relaxed);
         self.board_exchange(local, "all_gather")
     }
 
@@ -447,6 +673,7 @@ impl CommHandle {
         self.shared
             .bytes_rs
             .fetch_add(local.size_bytes() as u64, Ordering::Relaxed);
+        self.shared.ops_rs.fetch_add(1, Ordering::Relaxed);
         let shard = n / self.world;
         let all = self.board_exchange(local, "reduce_scatter")?;
         let lo = self.rank * shard;
@@ -501,6 +728,7 @@ impl CommHandle {
         self.shared
             .bytes_p2p
             .fetch_add(send.size_bytes() as u64, Ordering::Relaxed);
+        self.shared.ops_p2p.fetch_add(1, Ordering::Relaxed);
         self.ring_tx
             .send(send)
             .map_err(|_| CommError::Disconnected { op: "ring_send" })?;
@@ -523,6 +751,7 @@ impl CommHandle {
                 self.record_err(&e);
                 self.shared.board.poison(self.rank);
                 self.shared.board_multi.poison(self.rank);
+                self.shared.win.poison(self.rank);
                 Err(e.into())
             }
             Err(RecvTimeoutError::Disconnected) => {
@@ -539,6 +768,7 @@ impl CommHandle {
         self.shared
             .bytes_a2a
             .fetch_add(bytes as u64, Ordering::Relaxed);
+        self.shared.ops_a2a.fetch_add(1, Ordering::Relaxed);
         self.preflight("all_to_all");
         let all = self
             .shared
@@ -549,6 +779,60 @@ impl CommHandle {
                 e
             })?;
         Ok(all.iter().map(|v| v[self.rank].clone()).collect())
+    }
+
+    /// Post one micro-shard of a chunked all-to-all without blocking:
+    /// `parts[d]` goes to rank d.  Returns a ticket to redeem with
+    /// [`a2a_wait`](Self::a2a_wait).  All ranks must post and wait shards
+    /// in the same program order (SPMD contract); several shards may be in
+    /// flight at once, which is what lets the MoE engine overlap expert
+    /// compute on shard *i* with the exchange of shard *i+1*.
+    pub fn a2a_post(&self, parts: Vec<Tensor>) -> Result<A2aTicket> {
+        anyhow::ensure!(
+            parts.len() == self.world,
+            "a2a_post: {} parts for world {}",
+            parts.len(),
+            self.world
+        );
+        let bytes: usize = parts.iter().map(|t| t.size_bytes()).sum();
+        self.shared
+            .bytes_a2a
+            .fetch_add(bytes as u64, Ordering::Relaxed);
+        self.shared.ops_a2a.fetch_add(1, Ordering::Relaxed);
+        self.preflight("a2a_post");
+        let seq = self.a2a_seq.fetch_add(1, Ordering::Relaxed);
+        self.shared.win.post(self.rank, seq, parts).map_err(|e| {
+            self.record_err(&e);
+            e
+        })?;
+        Ok(A2aTicket { seq })
+    }
+
+    /// Complete a posted shard: blocks (with the configured deadline) until
+    /// every rank has posted the same shard, then returns what each rank
+    /// sent to us, in source-rank order.  A deadline poisons all boards so
+    /// peers blocked anywhere fail fast.
+    pub fn a2a_wait(&self, ticket: A2aTicket) -> Result<Vec<Tensor>> {
+        let res = self
+            .shared
+            .win
+            .wait(self.rank, ticket.seq, self.timeout, "a2a_wait");
+        match res {
+            Ok(all) => Ok(all.iter().map(|v| v[self.rank].clone()).collect()),
+            Err(e) => {
+                self.record_err(&e);
+                if matches!(e, CommError::Timeout { .. }) {
+                    self.shared.board.poison(self.rank);
+                    self.shared.board_multi.poison(self.rank);
+                }
+                Err(e.into())
+            }
+        }
+    }
+
+    /// Per-kind traffic snapshot (group-wide), for rank-side reporting.
+    pub fn traffic_by_kind(&self) -> CommTraffic {
+        self.shared.traffic_by_kind()
     }
 }
 
@@ -725,6 +1009,111 @@ mod tests {
         // peers failed fast -- nowhere near the 30 s deadline
         assert!(t0.elapsed() < Duration::from_secs(5));
         assert_eq!(comm.fault_stats().injected_kills, 1);
+    }
+
+    #[test]
+    fn chunked_a2a_transposes_like_blocking() {
+        let outs = run_world(3, |h| {
+            // two shards in flight at once; values encode (rank, dst, shard)
+            let mk = |shard: usize| {
+                (0..3)
+                    .map(|d| Tensor::scalar_f32((h.rank * 100 + d * 10 + shard) as f32))
+                    .collect::<Vec<_>>()
+            };
+            let t0 = h.a2a_post(mk(0)).unwrap();
+            let t1 = h.a2a_post(mk(1)).unwrap();
+            let r0 = h.a2a_wait(t0).unwrap();
+            let r1 = h.a2a_wait(t1).unwrap();
+            let vals = |r: Vec<Tensor>| {
+                r.iter().map(|t| t.item_f32().unwrap()).collect::<Vec<_>>()
+            };
+            (h.rank, vals(r0), vals(r1))
+        });
+        for (rank, r0, r1) in outs {
+            let want = |shard: usize| {
+                (0..3)
+                    .map(|s| (s * 100 + rank * 10 + shard) as f32)
+                    .collect::<Vec<f32>>()
+            };
+            assert_eq!(r0, want(0));
+            assert_eq!(r1, want(1));
+        }
+    }
+
+    #[test]
+    fn chunked_a2a_many_rounds_reuses_board() {
+        let outs = run_world(2, |h| {
+            let mut acc = 0.0;
+            for round in 0..40 {
+                let parts = (0..2)
+                    .map(|d| Tensor::scalar_f32((h.rank + d + round) as f32))
+                    .collect();
+                let t = h.a2a_post(parts).unwrap();
+                for r in h.a2a_wait(t).unwrap() {
+                    acc += r.item_f32().unwrap();
+                }
+            }
+            acc
+        });
+        // each rank receives (s + rank + round) from s in {0,1}
+        for (rank, acc) in outs.into_iter().enumerate() {
+            let want: f32 = (0..40)
+                .map(|r| (rank + r) as f32 + (1 + rank + r) as f32)
+                .sum();
+            assert_eq!(acc, want);
+        }
+    }
+
+    #[test]
+    fn chunked_a2a_wait_times_out_and_poisons() {
+        let cfg = CommCfg { timeout: Duration::from_millis(50), ..Default::default() };
+        let (comm, mut handles) = Comm::new_with(2, cfg);
+        let h0 = handles.remove(0);
+        // rank 1 never posts its shard
+        let t = h0
+            .a2a_post(vec![Tensor::scalar_f32(0.0), Tensor::scalar_f32(1.0)])
+            .unwrap();
+        let err = h0.a2a_wait(t).unwrap_err();
+        let ce = err.downcast_ref::<CommError>().unwrap();
+        assert!(matches!(ce, CommError::Timeout { op: "a2a_wait", rank: 0, .. }), "{ce}");
+        assert!(comm.is_poisoned());
+        assert_eq!(comm.fault_stats().timeouts, 1);
+    }
+
+    #[test]
+    fn traffic_by_kind_attributes_per_collective() {
+        let (comm, handles) = Comm::new(2);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                thread::spawn(move || {
+                    h.all_gather(Tensor::f32(&[4], vec![0.0; 4])).unwrap();
+                    h.reduce_scatter_sum(Tensor::f32(&[2], vec![0.0; 2])).unwrap();
+                    let t = h
+                        .a2a_post(vec![
+                            Tensor::f32(&[3], vec![0.0; 3]),
+                            Tensor::f32(&[3], vec![0.0; 3]),
+                        ])
+                        .unwrap();
+                    h.a2a_wait(t).unwrap();
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+        let t = comm.traffic_by_kind();
+        assert_eq!(t.all_gather_ops, 2);
+        assert_eq!(t.all_gather_bytes, 2 * 4 * 4);
+        assert_eq!(t.reduce_scatter_ops, 2);
+        assert_eq!(t.reduce_scatter_bytes, 2 * 2 * 4);
+        assert_eq!(t.all_to_all_ops, 2);
+        assert_eq!(t.all_to_all_bytes, 2 * 2 * 3 * 4);
+        assert_eq!(t.ring_ops, 0);
+        assert_eq!(t.total_bytes(), t.all_gather_bytes + t.reduce_scatter_bytes + t.all_to_all_bytes);
+        // back-compat 4-tuple view still agrees
+        let (ag, rs, p2p, a2a) = comm.traffic();
+        assert_eq!((ag, rs, p2p, a2a), (t.all_gather_bytes, t.reduce_scatter_bytes, t.ring_bytes, t.all_to_all_bytes));
     }
 
     #[test]

@@ -30,7 +30,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::collectives::{Comm, CommCfg, CommFaultStats, CommHandle};
+use crate::collectives::{Comm, CommCfg, CommFaultStats, CommHandle, CommTraffic};
 use crate::coordinator::optimizer::DistributedOptimizer;
 use crate::coordinator::{checkpoint, metrics};
 use crate::fault::FaultPlan;
@@ -55,6 +55,8 @@ pub struct DdpReport {
     pub params: Option<Bundle>,
     /// (all-gather bytes, reduce-scatter bytes)
     pub traffic: (u64, u64),
+    /// bytes + launches attributed per collective kind (all attempts)
+    pub traffic_kinds: CommTraffic,
     pub tokens_per_sec: f64,
     /// checkpoint-rollback recoveries performed (resilient runner only)
     pub recoveries: usize,
@@ -119,6 +121,7 @@ pub fn run_ddp(cfg: &DdpConfig, batch_fn: BatchFn) -> Result<DdpReport> {
         losses,
         params,
         traffic: (ag, rs),
+        traffic_kinds: comm.traffic_by_kind(),
         tokens_per_sec: (cfg.batch * cfg.seq * cfg.steps) as f64 / dt,
         ..Default::default()
     })
@@ -399,6 +402,7 @@ pub fn run_ddp_resilient(
     let health = Arc::new(metrics::HealthBoard::new(cfg.dp));
     let loss_sink = Arc::new(Mutex::new(vec![f32::NAN; cfg.steps]));
     let mut comm_stats = CommFaultStats::default();
+    let mut traffic_kinds = CommTraffic::default();
     let mut recoveries = 0usize;
     let mut events: Vec<String> = Vec::new();
     let mut resume: Option<ResumeState> = None;
@@ -431,6 +435,7 @@ pub fn run_ddp_resilient(
             .map(|(rank, j)| join_worker(rank, j))
             .collect();
         comm_stats.merge(comm.fault_stats());
+        traffic_kinds.merge(comm.traffic_by_kind());
 
         let first_err = results.iter().position(|r| r.is_err());
         match first_err {
@@ -443,10 +448,11 @@ pub fn run_ddp_resilient(
                     losses,
                     params,
                     traffic: (ag, rs),
+                    traffic_kinds,
                     tokens_per_sec: (cfg.batch * cfg.seq * cfg.steps) as f64 / dt,
                     recoveries,
                     fault_events: events,
-                    health: Some(health.snapshot(comm_stats)),
+                    health: Some(health.snapshot(comm_stats, traffic_kinds)),
                 });
             }
             Some(rank) => {

@@ -9,7 +9,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::collectives::CommFaultStats;
+use crate::collectives::{CommFaultStats, CommTraffic};
 
 // ---------------------------------------------------------------------------
 // Health board: per-rank heartbeats + recovery counters, shared between the
@@ -45,24 +45,27 @@ impl HealthBoard {
         self.restarts.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Freeze the counters (plus the communicator's fault counters) into a
-    /// plain value for `DdpReport`.
-    pub fn snapshot(&self, comm: CommFaultStats) -> HealthSnapshot {
+    /// Freeze the counters (plus the communicator's fault counters and
+    /// per-kind traffic attribution) into a plain value for `DdpReport`.
+    pub fn snapshot(&self, comm: CommFaultStats, traffic: CommTraffic) -> HealthSnapshot {
         HealthSnapshot {
             heartbeats: self.beats.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
             restarts: self.restarts.load(Ordering::Relaxed),
             comm,
+            traffic,
         }
     }
 }
 
-/// Plain-value snapshot of `HealthBoard` + comm fault counters.
+/// Plain-value snapshot of `HealthBoard` + comm fault counters + per-kind
+/// traffic (all_gather / reduce_scatter / ring / all_to_all).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct HealthSnapshot {
     /// steps started per rank (across all attempts, replays included)
     pub heartbeats: Vec<u64>,
     pub restarts: u64,
     pub comm: CommFaultStats,
+    pub traffic: CommTraffic,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -261,10 +264,15 @@ mod tests {
         hb.beat(0);
         hb.beat(2);
         hb.record_restart();
-        let snap = hb.snapshot(CommFaultStats { timeouts: 1, ..Default::default() });
+        let snap = hb.snapshot(
+            CommFaultStats { timeouts: 1, ..Default::default() },
+            CommTraffic { all_to_all_bytes: 64, all_to_all_ops: 2, ..Default::default() },
+        );
         assert_eq!(snap.heartbeats, vec![2, 0, 1]);
         assert_eq!(snap.restarts, 1);
         assert_eq!(snap.comm.timeouts, 1);
+        assert_eq!(snap.traffic.all_to_all_bytes, 64);
+        assert_eq!(snap.traffic.total_bytes(), 64);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Expert-parallel MoE dispatch (paper §2.2.3 EP) and the MoE execution
+//! Expert-parallel MoE execution (paper §2.2.3 EP) and the MoE execution
 //! strategies of Table 4 (top).
 //!
 //! The router runs as an HLO artifact on each EP rank's local tokens; the
@@ -17,12 +17,39 @@
 //!    exactly what static HLO cannot express and what block-sparse kernels
 //!    buy on GPU; here the coordinator schedules them.
 //!
-//! All three produce identical outputs for tokens within capacity (tested
-//! in rust/tests/moe.rs).
+//! Multi-rank execution: [`forward_ep`] runs the full
+//! dispatch -> local-expert execute -> combine pipeline over
+//! `CommHandle::{a2a_post, a2a_wait}`.  Local experts are split into
+//! *chunk groups* ([`EpCfg::chunk`] experts per shard), each group's
+//! tokens travel as one all-to-all micro-shard, and in overlap mode the
+//! scheduler posts shard c+1 and defers every return-shard wait so expert
+//! compute on shard c runs while its neighbours are still exchanging --
+//! the FSMoE-style pipelining.  Outputs are **bit-identical** to the
+//! single-rank path for every strategy (including capacity drops):
+//! per-destination send lists are stable-sorted by local expert so the
+//! receive-side concatenation reproduces global token order, and the
+//! combine accumulates in (EP rank asc, chunk group asc, row order) =
+//! global expert-ascending order, exactly the order the single-rank
+//! strategies use.
+//!
+//! Allocation discipline: a grow-only [`DispatchArena`] pools every
+//! launch/pack/combine scratch buffer, and [`StackedExpertWeights`] caches
+//! the (E, ..) grouped-GEMM weight stacks, so after one warmup step the
+//! hot path performs no scratch reallocation (`DispatchArena::alloc_events`
+//! stays flat -- asserted in benches/table4_moe.rs).  Expert compute is
+//! abstracted behind [`ExpertCompute`] so tests and benches can run the
+//! whole EP pipeline with a pure-Rust [`ReferenceExperts`] backend, no
+//! artifacts or PJRT needed (PJRT executables are not `Send`; each EP
+//! worker thread binds its own backend).
 
-use anyhow::Result;
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
+use std::time::{Duration, Instant};
 
+use anyhow::{anyhow, ensure, Result};
+
+use crate::collectives::{A2aTicket, CommHandle};
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::Tensor;
 
@@ -33,19 +60,156 @@ pub enum Strategy {
     MegaBlocks,
 }
 
-pub struct MoeLayer {
+impl Strategy {
+    /// Whether the strategy drops tokens beyond per-expert capacity
+    /// (MegaBlocks' exact-fit tiles never drop).
+    pub fn capped(self) -> bool {
+        !matches!(self, Strategy::MegaBlocks)
+    }
+
+    pub fn parse(s: &str) -> Result<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "loop" => Ok(Strategy::Loop),
+            "grouped" => Ok(Strategy::Grouped),
+            "megablocks" => Ok(Strategy::MegaBlocks),
+            _ => Err(anyhow!(
+                "unknown MoE strategy '{s}' (expected loop | grouped | megablocks)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Strategy::Loop => write!(f, "loop"),
+            Strategy::Grouped => write!(f, "grouped"),
+            Strategy::MegaBlocks => write!(f, "megablocks"),
+        }
+    }
+}
+
+/// MoE layer geometry, decoupled from artifacts so the EP engine and the
+/// reference backend can run without a compiled manifest.
+#[derive(Clone, Copy, Debug)]
+pub struct MoeGeom {
     pub d: usize,
     pub n_experts: usize,
     pub top_k: usize,
     pub cap: usize,
     pub tile: usize,
-    router: Rc<Executable>,
-    expert_cap: Rc<Executable>,
-    expert_tile: Rc<Executable>,
-    grouped: Vec<(usize, Rc<Executable>)>, // (n_local, exe)
+}
+
+// ---------------------------------------------------------------------------
+// Grow-only dispatch arena.
+// ---------------------------------------------------------------------------
+
+/// Scratch-tensor lane: per-launch (cap,d) / (tile,d) packing buffer.
+pub const LANE_LAUNCH: usize = 0;
+/// Scratch-tensor lane: grouped (n_local, cap, d) packing buffer.
+pub const LANE_GROUPED: usize = 1;
+const N_TENSOR_LANES: usize = 2;
+
+/// Vec lane: per-launch expert output staging.
+pub const VLANE_LAUNCH_OUT: usize = 0;
+/// Vec lane: single-rank expert-output slots.
+pub const VLANE_SLOTS: usize = 1;
+/// Vec lane: EP receive-side concatenated rows.
+pub const VLANE_RECV: usize = 2;
+/// Vec lane: EP receive-side output rows (with keep-flag column).
+pub const VLANE_OUT: usize = 3;
+const N_VEC_LANES: usize = 4;
+
+/// Grow-only scratch buffers for MoE dispatch.  Every lane keeps its
+/// high-water allocation; once shapes stabilise (after one warmup step)
+/// `alloc_events()` stops moving -- the zero-realloc property the bench
+/// asserts.  Buffers are handed out zeroed so padded launch rows match the
+/// freshly-allocated buffers of the naive path bit-for-bit.
+#[derive(Default)]
+pub struct DispatchArena {
+    tensors: Vec<Option<Tensor>>,
+    vecs: Vec<Option<Vec<f32>>>,
+    alloc_events: u64,
+}
+
+impl DispatchArena {
+    pub fn new() -> Self {
+        DispatchArena {
+            tensors: (0..N_TENSOR_LANES).map(|_| None).collect(),
+            vecs: (0..N_VEC_LANES).map(|_| None).collect(),
+            alloc_events: 0,
+        }
+    }
+
+    /// Number of times a lane actually had to (re)allocate.  Flat after
+    /// warmup when shapes are stable.
+    pub fn alloc_events(&self) -> u64 {
+        self.alloc_events
+    }
+
+    /// Zeroed f32 tensor of `shape` in `lane`, reused in place when the
+    /// shape matches the previous occupant.
+    pub fn tensor(&mut self, lane: usize, shape: &[usize]) -> Result<&mut Tensor> {
+        let reuse = self.tensors[lane]
+            .as_ref()
+            .is_some_and(|t| t.shape == shape);
+        if reuse {
+            for v in self.tensors[lane].as_mut().unwrap().as_f32_mut()? {
+                *v = 0.0;
+            }
+        } else {
+            self.alloc_events += 1;
+            self.tensors[lane] = Some(Tensor::zeros(shape));
+        }
+        Ok(self.tensors[lane].as_mut().unwrap())
+    }
+
+    /// Immutable view of the lane's current tensor (after filling it via
+    /// [`tensor`](Self::tensor)), for passing to a backend launch.
+    pub fn tensor_ref(&self, lane: usize) -> &Tensor {
+        self.tensors[lane]
+            .as_ref()
+            .expect("arena lane read before first fill")
+    }
+
+    /// Take a zeroed length-`n` scratch vec out of `lane` (ownership
+    /// transfer, so it can live alongside later arena borrows).  Return it
+    /// with [`put_vec`](Self::put_vec).
+    pub fn take_vec(&mut self, lane: usize, n: usize) -> Vec<f32> {
+        let mut v = self.vecs[lane].take().unwrap_or_default();
+        if v.capacity() < n {
+            self.alloc_events += 1;
+        }
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    pub fn put_vec(&mut self, lane: usize, v: Vec<f32>) {
+        self.vecs[lane] = Some(v);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Expert compute backends.
+// ---------------------------------------------------------------------------
+
+/// Backend that evaluates the expert MLPs on packed row buffers.  Rows are
+/// independent (the expert MLP has no cross-row coupling), so any backend
+/// is bit-identical between single-rank and EP execution as long as it is
+/// deterministic per row.  `out` receives exactly `x.numel()` f32s.
+pub trait ExpertCompute {
+    /// One expert over a capacity-padded `(cap, d)` buffer.
+    fn run_cap(&self, e: usize, x: &Tensor, out: &mut [f32]) -> Result<()>;
+    /// One expert over an exact-fit `(tile, d)` buffer.
+    fn run_tile(&self, e: usize, x: &Tensor, out: &mut [f32]) -> Result<()>;
+    /// Experts `[e0, e0 + n_local)` batched over `(n_local, cap, d)`.
+    fn run_grouped(&self, e0: usize, n_local: usize, x: &Tensor, out: &mut [f32])
+        -> Result<()>;
 }
 
 /// Expert weights: (w1, w3, w2) per expert.
+#[derive(Clone)]
 pub struct ExpertWeights {
     pub w1: Vec<Tensor>,
     pub w3: Vec<Tensor>,
@@ -68,6 +232,194 @@ impl ExpertWeights {
             w2: (0..e).map(|_| mk(rng, f, d)).collect(),
         }
     }
+}
+
+/// One-time cache of stacked `(n_local, ..)` weight tensors for grouped
+/// launches, keyed by the expert range.  Kills the per-forward `stack()`
+/// copies the old Grouped path performed on every call.
+#[derive(Default)]
+pub struct StackedExpertWeights {
+    cache: RefCell<HashMap<(usize, usize), Rc<(Tensor, Tensor, Tensor)>>>,
+}
+
+impl StackedExpertWeights {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stacked (w1, w3, w2) for experts `[e0, e0 + n)`, built on first use.
+    pub fn get(
+        &self,
+        w: &ExpertWeights,
+        e0: usize,
+        n: usize,
+    ) -> Result<Rc<(Tensor, Tensor, Tensor)>> {
+        if let Some(s) = self.cache.borrow().get(&(e0, n)) {
+            return Ok(s.clone());
+        }
+        let stack = |ws: &[Tensor]| -> Result<Tensor> {
+            let mut data = Vec::new();
+            for t in &ws[e0..e0 + n] {
+                data.extend_from_slice(t.as_f32()?);
+            }
+            let mut shape = vec![n];
+            shape.extend_from_slice(&ws[e0].shape);
+            Ok(Tensor::f32(&shape, data))
+        };
+        let s = Rc::new((stack(&w.w1)?, stack(&w.w3)?, stack(&w.w2)?));
+        self.cache.borrow_mut().insert((e0, n), s.clone());
+        Ok(s)
+    }
+}
+
+/// PJRT-artifact backend: the production path, binding a [`MoeLayer`]'s
+/// compiled executables to a weight set.  Not `Send` (PJRT executables
+/// hold raw pointers); each EP worker thread builds its own.
+pub struct PjrtExperts<'a> {
+    layer: &'a MoeLayer,
+    weights: &'a ExpertWeights,
+    stacked: StackedExpertWeights,
+}
+
+impl<'a> PjrtExperts<'a> {
+    pub fn new(layer: &'a MoeLayer, weights: &'a ExpertWeights) -> Self {
+        PjrtExperts { layer, weights, stacked: StackedExpertWeights::new() }
+    }
+
+    fn copy_out(res: &[Tensor], out: &mut [f32]) -> Result<()> {
+        let v = res[0].as_f32()?;
+        ensure!(v.len() == out.len(), "expert launch returned {} elems, expected {}",
+                v.len(), out.len());
+        out.copy_from_slice(v);
+        Ok(())
+    }
+}
+
+impl ExpertCompute for PjrtExperts<'_> {
+    fn run_cap(&self, e: usize, x: &Tensor, out: &mut [f32]) -> Result<()> {
+        let w = self.weights;
+        let res = self
+            .layer
+            .expert_cap
+            .run(&[&w.w1[e], &w.w3[e], &w.w2[e], x])?;
+        Self::copy_out(&res, out)
+    }
+
+    fn run_tile(&self, e: usize, x: &Tensor, out: &mut [f32]) -> Result<()> {
+        let w = self.weights;
+        let res = self
+            .layer
+            .expert_tile
+            .run(&[&w.w1[e], &w.w3[e], &w.w2[e], x])?;
+        Self::copy_out(&res, out)
+    }
+
+    fn run_grouped(
+        &self,
+        e0: usize,
+        n_local: usize,
+        x: &Tensor,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let exe = self.layer.grouped_exe(n_local)?;
+        let s = self.stacked.get(self.weights, e0, n_local)?;
+        let res = exe.run(&[&s.0, &s.1, &s.2, x])?;
+        Self::copy_out(&res, out)
+    }
+}
+
+/// Pure-Rust SwiGLU backend: `y = (silu(x·w1) ⊙ (x·w3)) · w2`, evaluated
+/// row by row in a fixed deterministic order.  Lets tests and benches run
+/// the complete EP pipeline with zero artifacts, and is `Send` so each EP
+/// worker thread can own a clone.
+#[derive(Clone)]
+pub struct ReferenceExperts {
+    weights: ExpertWeights,
+    d: usize,
+    f: usize,
+    scratch: RefCell<Vec<f32>>,
+}
+
+impl ReferenceExperts {
+    pub fn new(weights: ExpertWeights) -> Self {
+        let d = weights.w1[0].shape[0];
+        let f = weights.w1[0].shape[1];
+        ReferenceExperts { weights, d, f, scratch: RefCell::new(Vec::new()) }
+    }
+
+    fn rows(&self, e: usize, xv: &[f32], out: &mut [f32]) -> Result<()> {
+        let (d, f) = (self.d, self.f);
+        let w1 = self.weights.w1[e].as_f32()?;
+        let w3 = self.weights.w3[e].as_f32()?;
+        let w2 = self.weights.w2[e].as_f32()?;
+        let mut scratch = self.scratch.borrow_mut();
+        scratch.clear();
+        scratch.resize(f, 0.0);
+        let n = xv.len() / d;
+        for r in 0..n {
+            let x = &xv[r * d..(r + 1) * d];
+            for j in 0..f {
+                let mut h1 = 0.0f32;
+                let mut h3 = 0.0f32;
+                for c in 0..d {
+                    h1 += x[c] * w1[c * f + j];
+                    h3 += x[c] * w3[c * f + j];
+                }
+                let silu = h1 / (1.0 + (-h1).exp());
+                scratch[j] = silu * h3;
+            }
+            let o = &mut out[r * d..(r + 1) * d];
+            for (c, oc) in o.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (j, hj) in scratch.iter().enumerate() {
+                    acc += hj * w2[j * d + c];
+                }
+                *oc = acc;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ExpertCompute for ReferenceExperts {
+    fn run_cap(&self, e: usize, x: &Tensor, out: &mut [f32]) -> Result<()> {
+        self.rows(e, x.as_f32()?, out)
+    }
+
+    fn run_tile(&self, e: usize, x: &Tensor, out: &mut [f32]) -> Result<()> {
+        self.rows(e, x.as_f32()?, out)
+    }
+
+    fn run_grouped(
+        &self,
+        e0: usize,
+        n_local: usize,
+        x: &Tensor,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let per = x.shape[1] * x.shape[2];
+        let xv = x.as_f32()?;
+        for el in 0..n_local {
+            self.rows(e0 + el, &xv[el * per..(el + 1) * per], &mut out[el * per..(el + 1) * per])?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-backed MoE layer.
+// ---------------------------------------------------------------------------
+
+pub struct MoeLayer {
+    pub d: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub cap: usize,
+    pub tile: usize,
+    router: Rc<Executable>,
+    expert_cap: Rc<Executable>,
+    expert_tile: Rc<Executable>,
+    grouped: Vec<(usize, Rc<Executable>)>, // (n_local, exe)
 }
 
 impl MoeLayer {
@@ -102,6 +454,41 @@ impl MoeLayer {
         })
     }
 
+    pub fn geom(&self) -> MoeGeom {
+        MoeGeom {
+            d: self.d,
+            n_experts: self.n_experts,
+            top_k: self.top_k,
+            cap: self.cap,
+            tile: self.tile,
+        }
+    }
+
+    /// Grouped-GEMM executable for exactly `n_local` experts.  EP shards
+    /// of E/2, E/4, E/8 experts per rank select the matching variant;
+    /// errors name what was compiled so a miss is actionable.
+    pub fn grouped_exe(&self, n_local: usize) -> Result<&Rc<Executable>> {
+        self.grouped
+            .iter()
+            .find(|(el, _)| *el == n_local)
+            .map(|(_, exe)| exe)
+            .ok_or_else(|| {
+                let have: Vec<usize> = self.grouped.iter().map(|(el, _)| *el).collect();
+                anyhow!(
+                    "no grouped MoE artifact for {n_local} local experts \
+                     (compiled variants: {have:?}); regenerate artifacts or \
+                     pick an EP degree whose experts-per-rank matches"
+                )
+            })
+    }
+
+    /// Bind a weight set to this layer's executables.  Hold the returned
+    /// backend across steps: its [`StackedExpertWeights`] cache then
+    /// stacks grouped-GEMM weights once instead of on every forward.
+    pub fn bind<'a>(&'a self, weights: &'a ExpertWeights) -> PjrtExperts<'a> {
+        PjrtExperts::new(self, weights)
+    }
+
     /// Route local tokens: returns (gates (T,k), idx (T,k)).
     pub fn route(&self, router_w: &Tensor, x: &Tensor) -> Result<(Vec<f32>, Vec<i32>)> {
         let out = self.router.run(&[router_w, x])?;
@@ -117,123 +504,215 @@ impl MoeLayer {
         weights: &ExpertWeights,
         x: &Tensor,
     ) -> Result<(Tensor, Vec<usize>, usize)> {
+        let mut arena = DispatchArena::new();
+        self.forward_local_with(strategy, router_w, weights, x, &mut arena)
+    }
+
+    /// `forward_local` with caller-owned scratch, so repeated steps reuse
+    /// the arena's buffers and the stacked-weight cache lives in `backend`.
+    pub fn forward_local_with(
+        &self,
+        strategy: Strategy,
+        router_w: &Tensor,
+        weights: &ExpertWeights,
+        x: &Tensor,
+        arena: &mut DispatchArena,
+    ) -> Result<(Tensor, Vec<usize>, usize)> {
         let t = x.shape[0];
-        let d = self.d;
-        let xv = x.as_f32()?;
         let (gates, idx) = self.route(router_w, x)?;
-        let k = self.top_k;
-
-        // assignment lists per expert, in token order
-        let mut assign: Vec<Vec<(usize, f32)>> = vec![Vec::new(); self.n_experts];
-        for ti in 0..t {
-            for j in 0..k {
-                let e = idx[ti * k + j] as usize;
-                assign[e].push((ti, gates[ti * k + j]));
-            }
-        }
-        let counts: Vec<usize> = assign.iter().map(|a| a.len()).collect();
-
-        let mut y = vec![0f32; t * d];
-        let mut launches = 0usize;
-        match strategy {
-            Strategy::Loop => {
-                for e in 0..self.n_experts {
-                    let kept = assign[e].len().min(self.cap);
-                    let mut buf = vec![0f32; self.cap * d];
-                    for (s, &(ti, _)) in assign[e].iter().take(kept).enumerate() {
-                        buf[s * d..(s + 1) * d]
-                            .copy_from_slice(&xv[ti * d..(ti + 1) * d]);
-                    }
-                    let out = self.expert_cap.run(&[
-                        &weights.w1[e], &weights.w3[e], &weights.w2[e],
-                        &Tensor::f32(&[self.cap, d], buf),
-                    ])?;
-                    launches += 1;
-                    let ov = out[0].as_f32()?;
-                    for (s, &(ti, g)) in assign[e].iter().take(kept).enumerate() {
-                        for c in 0..d {
-                            y[ti * d + c] += g * ov[s * d + c];
-                        }
-                    }
-                }
-            }
-            Strategy::Grouped => {
-                let (e_local, exe) = self
-                    .grouped
-                    .iter()
-                    .find(|(el, _)| *el == self.n_experts)
-                    .ok_or_else(|| anyhow::anyhow!("no grouped artifact for e={}", self.n_experts))?;
-                let e_local = *e_local;
-                let mut buf = vec![0f32; e_local * self.cap * d];
-                for e in 0..e_local {
-                    let kept = assign[e].len().min(self.cap);
-                    for (s, &(ti, _)) in assign[e].iter().take(kept).enumerate() {
-                        let dst = (e * self.cap + s) * d;
-                        buf[dst..dst + d].copy_from_slice(&xv[ti * d..(ti + 1) * d]);
-                    }
-                }
-                // stacked weights (E, d, f) etc.
-                let stack = |ws: &[Tensor]| -> Result<Tensor> {
-                    let mut data = Vec::new();
-                    for w in ws {
-                        data.extend_from_slice(w.as_f32()?);
-                    }
-                    let mut shape = vec![ws.len()];
-                    shape.extend_from_slice(&ws[0].shape);
-                    Ok(Tensor::f32(&shape, data))
-                };
-                let out = exe.run(&[
-                    &stack(&weights.w1)?, &stack(&weights.w3)?, &stack(&weights.w2)?,
-                    &Tensor::f32(&[e_local, self.cap, d], buf),
-                ])?;
-                launches += 1;
-                let ov = out[0].as_f32()?;
-                for e in 0..e_local {
-                    let kept = assign[e].len().min(self.cap);
-                    for (s, &(ti, g)) in assign[e].iter().take(kept).enumerate() {
-                        let src = (e * self.cap + s) * d;
-                        for c in 0..d {
-                            y[ti * d + c] += g * ov[src + c];
-                        }
-                    }
-                }
-            }
-            Strategy::MegaBlocks => {
-                // exact-fit tiles: ceil(count/tile) launches per expert,
-                // no capacity drop, no padded FLOPs beyond the last tile.
-                for e in 0..self.n_experts {
-                    let n_e = assign[e].len();
-                    let mut s0 = 0usize;
-                    while s0 < n_e {
-                        let take = (n_e - s0).min(self.tile);
-                        let mut buf = vec![0f32; self.tile * d];
-                        for (s, &(ti, _)) in
-                            assign[e][s0..s0 + take].iter().enumerate()
-                        {
-                            buf[s * d..(s + 1) * d]
-                                .copy_from_slice(&xv[ti * d..(ti + 1) * d]);
-                        }
-                        let out = self.expert_tile.run(&[
-                            &weights.w1[e], &weights.w3[e], &weights.w2[e],
-                            &Tensor::f32(&[self.tile, d], buf),
-                        ])?;
-                        launches += 1;
-                        let ov = out[0].as_f32()?;
-                        for (s, &(ti, g)) in
-                            assign[e][s0..s0 + take].iter().enumerate()
-                        {
-                            for c in 0..d {
-                                y[ti * d + c] += g * ov[s * d + c];
-                            }
-                        }
-                        s0 += take;
-                    }
-                }
-            }
-        }
-        Ok((Tensor::f32(&[t, d], y), counts, launches))
+        let backend = PjrtExperts::new(self, weights);
+        let (y, counts, launches, _dropped) = forward_tokens(
+            &backend,
+            strategy,
+            &self.geom(),
+            &gates,
+            &idx,
+            x.as_f32()?,
+            t,
+            arena,
+        )?;
+        Ok((Tensor::f32(&[t, self.d], y), counts, launches))
     }
 }
+
+// ---------------------------------------------------------------------------
+// Strategy launcher shared by the single-rank and EP paths.
+// ---------------------------------------------------------------------------
+
+/// Run experts `[e0, e0 + rows.len())` over per-expert row lists, writing
+/// raw (ungated) expert outputs to `out[dst * ostride ..][..d]` for each
+/// `(src, dst)` pair.  Rows are read from `xv[src * xstride ..][..d]`.
+/// Capacity truncation is the caller's job: cap-strategy lists must
+/// already be <= cap rows.  `launch_empty` preserves the single-rank Loop
+/// contract of one launch per expert even when an expert got no tokens.
+/// Returns the number of launches issued.
+#[allow(clippy::too_many_arguments)]
+fn exec_rows(
+    backend: &dyn ExpertCompute,
+    strategy: Strategy,
+    geom: &MoeGeom,
+    e0: usize,
+    rows: &[Vec<(usize, usize)>],
+    xv: &[f32],
+    xstride: usize,
+    out: &mut [f32],
+    ostride: usize,
+    arena: &mut DispatchArena,
+    launch_empty: bool,
+) -> Result<usize> {
+    let (d, cap, tile) = (geom.d, geom.cap, geom.tile);
+    let n_local = rows.len();
+    let mut launches = 0usize;
+    match strategy {
+        Strategy::Loop => {
+            for (el, list) in rows.iter().enumerate() {
+                if list.is_empty() && !launch_empty {
+                    continue;
+                }
+                ensure!(list.len() <= cap, "Loop launch over capacity");
+                let mut lout = arena.take_vec(VLANE_LAUNCH_OUT, cap * d);
+                {
+                    let xt = arena.tensor(LANE_LAUNCH, &[cap, d])?;
+                    let b = xt.as_f32_mut()?;
+                    for (s, &(src, _)) in list.iter().enumerate() {
+                        b[s * d..(s + 1) * d]
+                            .copy_from_slice(&xv[src * xstride..src * xstride + d]);
+                    }
+                }
+                backend.run_cap(e0 + el, arena.tensor_ref(LANE_LAUNCH), &mut lout)?;
+                launches += 1;
+                for (s, &(_, dst)) in list.iter().enumerate() {
+                    out[dst * ostride..dst * ostride + d]
+                        .copy_from_slice(&lout[s * d..(s + 1) * d]);
+                }
+                arena.put_vec(VLANE_LAUNCH_OUT, lout);
+            }
+        }
+        Strategy::Grouped => {
+            let total: usize = rows.iter().map(|l| l.len()).sum();
+            if total > 0 || launch_empty {
+                let mut lout = arena.take_vec(VLANE_LAUNCH_OUT, n_local * cap * d);
+                {
+                    let xt = arena.tensor(LANE_GROUPED, &[n_local, cap, d])?;
+                    let b = xt.as_f32_mut()?;
+                    for (el, list) in rows.iter().enumerate() {
+                        ensure!(list.len() <= cap, "Grouped launch over capacity");
+                        for (s, &(src, _)) in list.iter().enumerate() {
+                            let o = (el * cap + s) * d;
+                            b[o..o + d]
+                                .copy_from_slice(&xv[src * xstride..src * xstride + d]);
+                        }
+                    }
+                }
+                backend.run_grouped(e0, n_local, arena.tensor_ref(LANE_GROUPED), &mut lout)?;
+                launches += 1;
+                for (el, list) in rows.iter().enumerate() {
+                    for (s, &(_, dst)) in list.iter().enumerate() {
+                        let src = (el * cap + s) * d;
+                        out[dst * ostride..dst * ostride + d]
+                            .copy_from_slice(&lout[src..src + d]);
+                    }
+                }
+                arena.put_vec(VLANE_LAUNCH_OUT, lout);
+            }
+        }
+        Strategy::MegaBlocks => {
+            for (el, list) in rows.iter().enumerate() {
+                let mut s0 = 0usize;
+                while s0 < list.len() {
+                    let take = (list.len() - s0).min(tile);
+                    let mut lout = arena.take_vec(VLANE_LAUNCH_OUT, tile * d);
+                    {
+                        let xt = arena.tensor(LANE_LAUNCH, &[tile, d])?;
+                        let b = xt.as_f32_mut()?;
+                        for (s, &(src, _)) in list[s0..s0 + take].iter().enumerate() {
+                            b[s * d..(s + 1) * d]
+                                .copy_from_slice(&xv[src * xstride..src * xstride + d]);
+                        }
+                    }
+                    backend.run_tile(e0 + el, arena.tensor_ref(LANE_LAUNCH), &mut lout)?;
+                    launches += 1;
+                    for (s, &(_, dst)) in list[s0..s0 + take].iter().enumerate() {
+                        out[dst * ostride..dst * ostride + d]
+                            .copy_from_slice(&lout[s * d..(s + 1) * d]);
+                    }
+                    arena.put_vec(VLANE_LAUNCH_OUT, lout);
+                    s0 += take;
+                }
+            }
+        }
+    }
+    Ok(launches)
+}
+
+/// Single-rank MoE forward over pre-routed tokens: builds per-expert
+/// assignment lists from `(gates, idx)`, executes the strategy via
+/// `backend`, and gate-combines.  Returns `(y, counts, launches, dropped)`.
+/// This is the reference the EP path must match bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_tokens(
+    backend: &dyn ExpertCompute,
+    strategy: Strategy,
+    geom: &MoeGeom,
+    gates: &[f32],
+    idx: &[i32],
+    xv: &[f32],
+    t: usize,
+    arena: &mut DispatchArena,
+) -> Result<(Vec<f32>, Vec<usize>, usize, usize)> {
+    let (d, k) = (geom.d, geom.top_k);
+    ensure!(idx.len() == t * k && gates.len() == t * k,
+            "router outputs do not match {t} tokens x top-{k}");
+    // assignment lists per expert, in token order
+    let mut assign: Vec<Vec<(usize, f32)>> = vec![Vec::new(); geom.n_experts];
+    for ti in 0..t {
+        for j in 0..k {
+            let e = idx[ti * k + j] as usize;
+            ensure!(e < geom.n_experts, "router index {e} out of range");
+            assign[e].push((ti, gates[ti * k + j]));
+        }
+    }
+    let counts: Vec<usize> = assign.iter().map(|a| a.len()).collect();
+
+    // destination slots: expert-major enumeration of kept assignments
+    let mut pairs: Vec<Vec<(usize, usize)>> = Vec::with_capacity(geom.n_experts);
+    let mut slot = 0usize;
+    let mut dropped = 0usize;
+    for a in &assign {
+        let kept = if strategy.capped() { a.len().min(geom.cap) } else { a.len() };
+        dropped += a.len() - kept;
+        let mut list = Vec::with_capacity(kept);
+        for &(ti, _) in &a[..kept] {
+            list.push((ti, slot));
+            slot += 1;
+        }
+        pairs.push(list);
+    }
+
+    let mut slots_buf = arena.take_vec(VLANE_SLOTS, slot * d);
+    let launches = exec_rows(
+        backend, strategy, geom, 0, &pairs, xv, d, &mut slots_buf, d, arena, true,
+    )?;
+
+    // gate-weighted combine, expert-ascending then token order -- the f32
+    // accumulation order every path must reproduce
+    let mut y = vec![0f32; t * d];
+    for (e, list) in pairs.iter().enumerate() {
+        for (s, &(ti, dst)) in list.iter().enumerate() {
+            let g = assign[e][s].1;
+            let row = &slots_buf[dst * d..(dst + 1) * d];
+            for (c, v) in row.iter().enumerate() {
+                y[ti * d + c] += g * v;
+            }
+        }
+    }
+    arena.put_vec(VLANE_SLOTS, slots_buf);
+    Ok((y, counts, launches, dropped))
+}
+
+// ---------------------------------------------------------------------------
+// Expert-parallel dispatch plan + execution.
+// ---------------------------------------------------------------------------
 
 /// Expert-parallel dispatch plan for one EP rank: which local tokens go to
 /// which EP peer (expert owner), in deterministic order.
@@ -263,6 +742,296 @@ pub fn plan_dispatch(
         }
     }
     EpPlan { ep_world, experts_per_rank, sends }
+}
+
+/// EP execution config.
+#[derive(Clone, Copy, Debug)]
+pub struct EpCfg {
+    pub strategy: Strategy,
+    /// Local experts per all-to-all micro-shard; 0 = one shard with every
+    /// local expert (unchunked).
+    pub chunk: usize,
+    /// Post shard c+1 and defer return-shard waits so expert compute
+    /// overlaps in-flight exchanges (FSMoE-style); `false` = fully
+    /// sequential dispatch -> compute -> combine per shard.
+    pub overlap: bool,
+}
+
+impl Default for EpCfg {
+    fn default() -> Self {
+        EpCfg { strategy: Strategy::MegaBlocks, chunk: 0, overlap: true }
+    }
+}
+
+/// Per-forward EP instrumentation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpStats {
+    /// all-to-all rounds (= ceil(experts_per_rank / chunk))
+    pub rounds: usize,
+    /// expert launches issued on this rank
+    pub launches: usize,
+    /// (token, expert) rows this rank sent out
+    pub sent_rows: usize,
+    /// rows received for this rank's experts
+    pub recv_rows: usize,
+    /// received rows dropped by per-expert capacity (cap strategies only)
+    pub dropped_rows: usize,
+    /// bytes this rank posted (dispatch + return shards)
+    pub payload_bytes: u64,
+    /// time blocked in `a2a_wait`
+    pub comm_wait: Duration,
+    /// time in expert compute
+    pub compute: Duration,
+    /// portion of `compute` during which >= 1 posted shard was in flight
+    pub compute_overlapped: Duration,
+}
+
+impl EpStats {
+    /// Fraction of expert-compute time that ran under an in-flight
+    /// exchange: 0.0 = fully serialized, 1.0 = every launch overlapped.
+    pub fn overlap_frac(&self) -> f64 {
+        let c = self.compute.as_secs_f64();
+        if c == 0.0 {
+            0.0
+        } else {
+            self.compute_overlapped.as_secs_f64() / c
+        }
+    }
+}
+
+/// Receiver side of one chunked round: concatenate the shards from every
+/// source rank, run this rank's expert chunk group, and build the return
+/// shards.  Rows travel as (d + 1)-wide records -- data columns plus a
+/// local-expert id on the way in, a keep-flag on the way out (0.0 marks a
+/// capacity-dropped row the source must not accumulate).
+#[allow(clippy::too_many_arguments)]
+fn ep_exec_round(
+    backend: &dyn ExpertCompute,
+    cfg: &EpCfg,
+    geom: &MoeGeom,
+    rank: usize,
+    epr: usize,
+    chunk: usize,
+    c: usize,
+    recv: &[Tensor],
+    arena: &mut DispatchArena,
+    stats: &mut EpStats,
+) -> Result<Vec<Tensor>> {
+    let d = geom.d;
+    let w = d + 1;
+    let group = chunk.min(epr - c * chunk);
+    let n_total: usize = recv.iter().map(|t| t.shape[0]).sum();
+    stats.recv_rows += n_total;
+
+    let mut recv_buf = arena.take_vec(VLANE_RECV, n_total * w);
+    let mut off = 0usize;
+    for t in recv {
+        let v = t.as_f32()?;
+        recv_buf[off..off + v.len()].copy_from_slice(v);
+        off += v.len();
+    }
+
+    // per-expert row lists in concat (src-major) order == global token
+    // order, truncated at capacity for cap strategies
+    let mut lists: Vec<Vec<(usize, usize)>> = vec![Vec::new(); group];
+    let mut out_buf = arena.take_vec(VLANE_OUT, n_total * w);
+    for r in 0..n_total {
+        let el = recv_buf[r * w + d] as usize;
+        ensure!(
+            el >= c * chunk && el < c * chunk + group,
+            "shard row for expert {el} arrived in round {c}"
+        );
+        let eg = el - c * chunk;
+        if cfg.strategy.capped() && lists[eg].len() >= geom.cap {
+            stats.dropped_rows += 1;
+            continue; // keep-flag stays 0.0
+        }
+        lists[eg].push((r, r));
+        out_buf[r * w + d] = 1.0;
+    }
+
+    let e0 = rank * epr + c * chunk;
+    stats.launches += exec_rows(
+        backend, cfg.strategy, geom, e0, &lists, &recv_buf, w, &mut out_buf, w,
+        arena, false,
+    )?;
+
+    // slice the concat output back into one return shard per source rank
+    let mut rets = Vec::with_capacity(recv.len());
+    let mut off = 0usize;
+    for t in recv {
+        let n = t.shape[0];
+        let data = out_buf[off * w..(off + n) * w].to_vec();
+        off += n;
+        let ret = Tensor::f32(&[n, w], data);
+        stats.payload_bytes += ret.size_bytes() as u64;
+        rets.push(ret);
+    }
+    arena.put_vec(VLANE_RECV, recv_buf);
+    arena.put_vec(VLANE_OUT, out_buf);
+    Ok(rets)
+}
+
+/// Expert-parallel MoE forward on one EP rank (call SPMD on every rank of
+/// `comm`'s group).  `gates`/`idx` are this rank's router outputs over its
+/// local `(t, d)` tokens `x`; `backend` must hold the full replicated
+/// expert weight set (each rank computes experts
+/// `[rank * E/world, (rank+1) * E/world)`).
+///
+/// Pipeline per chunk group: dispatch all-to-all (tokens sorted by local
+/// expert so receive order reproduces global token order) -> local expert
+/// execute -> return all-to-all -> gate-weighted combine in (EP rank asc,
+/// group asc, row order), which is exactly global expert-ascending order.
+/// Outputs are therefore bit-identical to [`forward_tokens`] over the
+/// concatenated batch, for every strategy and any `chunk`/`overlap`
+/// setting.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_ep(
+    comm: &CommHandle,
+    backend: &dyn ExpertCompute,
+    cfg: &EpCfg,
+    geom: &MoeGeom,
+    gates: &[f32],
+    idx: &[i32],
+    x: &Tensor,
+    arena: &mut DispatchArena,
+) -> Result<(Tensor, EpStats)> {
+    let world = comm.world;
+    let (d, k, e) = (geom.d, geom.top_k, geom.n_experts);
+    ensure!(e % world == 0, "n_experts {e} not divisible by ep_world {world}");
+    let epr = e / world;
+    let chunk = if cfg.chunk == 0 { epr } else { cfg.chunk.min(epr) };
+    let rounds = epr.div_ceil(chunk);
+    let t = x.shape[0];
+    let xv = x.as_f32()?;
+    ensure!(x.shape == [t, d], "x must be (T, d)");
+
+    let mut stats = EpStats { rounds, ..Default::default() };
+
+    // Send lists, stable-sorted by destination-local expert: within one
+    // (src, dst) pair the receiver then sees rows grouped by expert in
+    // original token order, and src-major concatenation on the receiver
+    // reproduces the global token order of the single-rank reference.
+    let plan = plan_dispatch(world, e, idx, gates, k);
+    let mut sends = plan.sends;
+    for s in &mut sends {
+        s.sort_by_key(|&(_, el, _)| el);
+    }
+    stats.sent_rows = sends.iter().map(|s| s.len()).sum();
+
+    // per-destination round boundaries over the sorted lists
+    let w = d + 1;
+    let mut offs: Vec<Vec<usize>> = Vec::with_capacity(world);
+    for s in &sends {
+        let mut o = vec![0usize; rounds + 1];
+        let mut i = 0usize;
+        for (c, oc) in o.iter_mut().enumerate().skip(1) {
+            let lim = c * chunk;
+            while i < s.len() && s[i].1 < lim {
+                i += 1;
+            }
+            *oc = i;
+        }
+        o[rounds] = s.len();
+        offs.push(o);
+    }
+
+    let build_shard = |c: usize| -> (Vec<Tensor>, u64) {
+        let mut parts = Vec::with_capacity(world);
+        let mut bytes = 0u64;
+        for dst in 0..world {
+            let rows = &sends[dst][offs[dst][c]..offs[dst][c + 1]];
+            let mut data = Vec::with_capacity(rows.len() * w);
+            for &(ti, el, _g) in rows {
+                data.extend_from_slice(&xv[ti * d..(ti + 1) * d]);
+                data.push(el as f32);
+            }
+            let part = Tensor::f32(&[rows.len(), w], data);
+            bytes += part.size_bytes() as u64;
+            parts.push(part);
+        }
+        (parts, bytes)
+    };
+
+    // dispatch / execute / return, per round
+    let mut returns: Vec<Vec<Tensor>> = Vec::with_capacity(rounds);
+    if cfg.overlap {
+        let mut data_tk: VecDeque<A2aTicket> = VecDeque::new();
+        let mut ret_tk: Vec<A2aTicket> = Vec::new();
+        let mut outstanding = 0usize;
+        let (parts, bytes) = build_shard(0);
+        stats.payload_bytes += bytes;
+        data_tk.push_back(comm.a2a_post(parts)?);
+        outstanding += 1;
+        for c in 0..rounds {
+            if c + 1 < rounds {
+                let (parts, bytes) = build_shard(c + 1);
+                stats.payload_bytes += bytes;
+                data_tk.push_back(comm.a2a_post(parts)?);
+                outstanding += 1;
+            }
+            let tk = data_tk.pop_front().unwrap();
+            let t0 = Instant::now();
+            let recv = comm.a2a_wait(tk)?;
+            stats.comm_wait += t0.elapsed();
+            outstanding -= 1;
+            let t0 = Instant::now();
+            let rets = ep_exec_round(
+                backend, cfg, geom, comm.rank, epr, chunk, c, &recv, arena, &mut stats,
+            )?;
+            let dt = t0.elapsed();
+            stats.compute += dt;
+            if outstanding > 0 {
+                stats.compute_overlapped += dt;
+            }
+            ret_tk.push(comm.a2a_post(rets)?);
+            outstanding += 1;
+        }
+        for tk in ret_tk {
+            let t0 = Instant::now();
+            returns.push(comm.a2a_wait(tk)?);
+            stats.comm_wait += t0.elapsed();
+        }
+    } else {
+        for c in 0..rounds {
+            let (parts, bytes) = build_shard(c);
+            stats.payload_bytes += bytes;
+            let tk = comm.a2a_post(parts)?;
+            let t0 = Instant::now();
+            let recv = comm.a2a_wait(tk)?;
+            stats.comm_wait += t0.elapsed();
+            let t0 = Instant::now();
+            let rets = ep_exec_round(
+                backend, cfg, geom, comm.rank, epr, chunk, c, &recv, arena, &mut stats,
+            )?;
+            stats.compute += t0.elapsed();
+            let tk = comm.a2a_post(rets)?;
+            let t0 = Instant::now();
+            returns.push(comm.a2a_wait(tk)?);
+            stats.comm_wait += t0.elapsed();
+        }
+    }
+
+    // combine: dst asc, round asc, rows in sorted send order -- for every
+    // token that is global expert-ascending accumulation, matching the
+    // single-rank reference bit-for-bit
+    let mut y = vec![0f32; t * d];
+    for dst in 0..world {
+        for (c, round_ret) in returns.iter().enumerate() {
+            let meta = &sends[dst][offs[dst][c]..offs[dst][c + 1]];
+            let rv = round_ret[dst].as_f32()?;
+            ensure!(rv.len() == meta.len() * w, "return shard shape mismatch");
+            for (r, &(ti, _el, g)) in meta.iter().enumerate() {
+                if rv[r * w + d] == 0.0 {
+                    continue; // dropped at capacity on the receiver
+                }
+                for c2 in 0..d {
+                    y[ti * d + c2] += g * rv[r * w + c2];
+                }
+            }
+        }
+    }
+    Ok((Tensor::f32(&[t, d], y), stats))
 }
 
 #[cfg(test)]
@@ -297,5 +1066,102 @@ mod tests {
                 }
             }
         });
+    }
+
+    fn toy_setup(rng: &mut Rng, e: usize, d: usize, f: usize, t: usize, k: usize)
+        -> (ReferenceExperts, MoeGeom, Vec<f32>, Vec<i32>, Vec<f32>) {
+        let weights = ExpertWeights::random(rng, e, d, f);
+        let geom = MoeGeom { d, n_experts: e, top_k: k, cap: 4, tile: 2 };
+        let xv: Vec<f32> = (0..t * d).map(|_| rng.normal()).collect();
+        let mut idx = Vec::with_capacity(t * k);
+        let mut gates = Vec::with_capacity(t * k);
+        for _ in 0..t * k {
+            idx.push(rng.below(e) as i32);
+            gates.push(rng.f32());
+        }
+        (ReferenceExperts::new(weights), geom, gates, idx, xv)
+    }
+
+    #[test]
+    fn strategies_agree_on_reference_backend() {
+        // within capacity, all three strategies produce identical outputs;
+        // this is the single-rank invariant the EP path inherits.
+        check("moe_strategies_agree", 16, |rng: &mut Rng| {
+            let (be, geom, gates, idx, xv) = toy_setup(rng, 4, 3, 5, 6, 2);
+            let mut arena = DispatchArena::new();
+            let (y_mb, counts, _l, drop_mb) = forward_tokens(
+                &be, Strategy::MegaBlocks, &geom, &gates, &idx, &xv, 6, &mut arena,
+            ).unwrap();
+            assert_eq!(drop_mb, 0);
+            assert_eq!(counts.iter().sum::<usize>(), 12);
+            if counts.iter().all(|&c| c <= geom.cap) {
+                for s in [Strategy::Loop, Strategy::Grouped] {
+                    let (y, _, _, dropped) = forward_tokens(
+                        &be, s, &geom, &gates, &idx, &xv, 6, &mut arena,
+                    ).unwrap();
+                    assert_eq!(dropped, 0);
+                    for (a, b) in y.iter().zip(&y_mb) {
+                        assert!((a - b).abs() < 1e-4, "{s}: {a} vs {b}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn loop_launches_every_expert_grouped_launches_once() {
+        let mut rng = Rng::new(7);
+        let (be, geom, gates, idx, xv) = toy_setup(&mut rng, 4, 3, 5, 6, 2);
+        let mut arena = DispatchArena::new();
+        let (_, _, l_loop, _) = forward_tokens(
+            &be, Strategy::Loop, &geom, &gates, &idx, &xv, 6, &mut arena,
+        ).unwrap();
+        assert_eq!(l_loop, geom.n_experts);
+        let (_, counts, l_grp, _) = forward_tokens(
+            &be, Strategy::Grouped, &geom, &gates, &idx, &xv, 6, &mut arena,
+        ).unwrap();
+        assert_eq!(l_grp, 1);
+        let (_, _, l_mb, _) = forward_tokens(
+            &be, Strategy::MegaBlocks, &geom, &gates, &idx, &xv, 6, &mut arena,
+        ).unwrap();
+        let want: usize = counts.iter().map(|c| c.div_ceil(geom.tile)).sum();
+        assert_eq!(l_mb, want);
+    }
+
+    #[test]
+    fn arena_allocs_go_flat_after_warmup() {
+        let mut rng = Rng::new(11);
+        let (be, geom, gates, idx, xv) = toy_setup(&mut rng, 4, 3, 5, 6, 2);
+        let mut arena = DispatchArena::new();
+        for s in [Strategy::Loop, Strategy::Grouped, Strategy::MegaBlocks] {
+            // warmup step sizes the lanes for this strategy
+            forward_tokens(&be, s, &geom, &gates, &idx, &xv, 6, &mut arena).unwrap();
+            let after_warmup = arena.alloc_events();
+            for _ in 0..5 {
+                forward_tokens(&be, s, &geom, &gates, &idx, &xv, 6, &mut arena).unwrap();
+            }
+            assert_eq!(arena.alloc_events(), after_warmup, "{s} reallocated");
+        }
+    }
+
+    #[test]
+    fn capacity_truncation_drops_in_token_order() {
+        // one expert, cap 4, 6 tokens all routed to it: the last 2 drop
+        let mut rng = Rng::new(3);
+        let weights = ExpertWeights::random(&mut rng, 1, 2, 3);
+        let be = ReferenceExperts::new(weights);
+        let geom = MoeGeom { d: 2, n_experts: 1, top_k: 1, cap: 4, tile: 2 };
+        let xv: Vec<f32> = (0..12).map(|i| i as f32 * 0.1).collect();
+        let gates = vec![1.0f32; 6];
+        let idx = vec![0i32; 6];
+        let mut arena = DispatchArena::new();
+        let (y, counts, _, dropped) = forward_tokens(
+            &be, Strategy::Loop, &geom, &gates, &idx, &xv, 6, &mut arena,
+        ).unwrap();
+        assert_eq!(counts, vec![6]);
+        assert_eq!(dropped, 2);
+        // dropped tokens get zero output
+        assert_eq!(&y[8..12], &[0.0, 0.0, 0.0, 0.0]);
+        assert!(y[0] != 0.0 || y[1] != 0.0);
     }
 }

@@ -181,10 +181,17 @@ pub fn pack_state(mc: &Tensor, ld: &Tensor) -> Result<Tensor> {
 pub fn unpack_state(packed: &Tensor, state_shape: &[usize]) -> Result<(Tensor, Tensor)> {
     let n: usize = state_shape.iter().product();
     let v = packed.as_f32()?;
-    let dv = state_shape[state_shape.len() - 1];
     let mut ld_shape = state_shape.to_vec();
     ld_shape.pop();
-    let _ = dv;
+    let ld_n: usize = ld_shape.iter().product();
+    anyhow::ensure!(
+        v.len() == n + ld_n,
+        "packed state has {} elems, expected {} (state) + {} (log-decay) \
+         for state shape {state_shape:?}",
+        v.len(),
+        n,
+        ld_n
+    );
     Ok((
         Tensor::f32(state_shape, v[..n].to_vec()),
         Tensor::f32(&ld_shape, v[n..].to_vec()),

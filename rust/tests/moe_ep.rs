@@ -1,0 +1,243 @@
+//! Expert-parallel MoE correctness: `forward_ep` over ep_world ∈ {1,2,4}
+//! must be element-wise **bit-identical** to the single-rank
+//! `forward_tokens` reference for all three strategies -- within-capacity
+//! batches, ragged token counts that leave experts empty, over-capacity
+//! batches that force drops, and every chunk/overlap combination.
+//!
+//! Everything here runs on the pure-Rust [`ReferenceExperts`] backend, so
+//! no compiled artifacts (and no PJRT) are required -- the same pattern as
+//! tests/fault_tolerance.rs.
+
+use std::sync::Arc;
+use std::thread;
+
+use linear_moe::collectives::Comm;
+use linear_moe::coordinator::moe_ep::{
+    forward_ep, forward_tokens, DispatchArena, EpCfg, EpStats, ExpertWeights,
+    MoeGeom, ReferenceExperts, Strategy,
+};
+use linear_moe::rng::{check, Rng};
+use linear_moe::tensor::Tensor;
+
+const STRATEGIES: [Strategy; 3] =
+    [Strategy::Loop, Strategy::Grouped, Strategy::MegaBlocks];
+
+/// A routed toy batch: global tokens, gates, and expert indices.
+struct Batch {
+    geom: MoeGeom,
+    weights: ExpertWeights,
+    xv: Vec<f32>,
+    gates: Vec<f32>,
+    idx: Vec<i32>,
+    t: usize,
+}
+
+/// Build a batch whose global token count divides `ep_world`.  `skew`
+/// routes everything into the first expert of each rank-block so some
+/// experts stay empty (ragged) and cap strategies drop rows.
+fn make_batch(rng: &mut Rng, ep_world: usize, cap: usize, skew: bool) -> Batch {
+    let epr = 1 + rng.below(3); // experts per rank
+    let e = ep_world * epr;
+    let k = 1 + rng.below(2.min(e));
+    let t = ep_world * (1 + rng.below(12)); // equal tokens per rank
+    let d = 1 + rng.below(5);
+    let f = 1 + rng.below(6);
+    let weights = ExpertWeights::random(rng, e, d, f);
+    let geom = MoeGeom { d, n_experts: e, top_k: k, cap, tile: 1 + rng.below(3) };
+    let xv: Vec<f32> = (0..t * d).map(|_| rng.normal()).collect();
+    let mut gates = Vec::with_capacity(t * k);
+    let mut idx = Vec::with_capacity(t * k);
+    for _ in 0..t * k {
+        let ex = if skew {
+            (rng.below(ep_world) * epr) as i32 // first expert of a block
+        } else {
+            rng.below(e) as i32
+        };
+        idx.push(ex);
+        gates.push(rng.f32());
+    }
+    Batch { geom, weights, xv, gates, idx, t }
+}
+
+/// Run `forward_ep` SPMD over `ep_world` threads on rank-partitioned
+/// slices of the batch and reassemble the global output in rank order.
+fn run_ep(b: &Batch, ep_world: usize, cfg: EpCfg) -> (Vec<f32>, Vec<EpStats>) {
+    let t_local = b.t / ep_world;
+    let (d, k) = (b.geom.d, b.geom.top_k);
+    let backend0 = ReferenceExperts::new(b.weights.clone());
+    let (_comm, handles) = Comm::new(ep_world);
+    let shared = Arc::new((b.xv.clone(), b.gates.clone(), b.idx.clone()));
+    let geom = b.geom;
+    let joins: Vec<_> = handles
+        .into_iter()
+        .map(|h| {
+            let backend = backend0.clone();
+            let shared = shared.clone();
+            thread::spawn(move || {
+                let (xv, gates, idx) = &*shared;
+                let r = h.rank;
+                let x = Tensor::f32(
+                    &[t_local, d],
+                    xv[r * t_local * d..(r + 1) * t_local * d].to_vec(),
+                );
+                let g = &gates[r * t_local * k..(r + 1) * t_local * k];
+                let i = &idx[r * t_local * k..(r + 1) * t_local * k];
+                let mut arena = DispatchArena::new();
+                let (y, stats) =
+                    forward_ep(&h, &backend, &cfg, &geom, g, i, &x, &mut arena).unwrap();
+                (r, y.as_f32().unwrap().to_vec(), stats)
+            })
+        })
+        .collect();
+    let mut out = vec![0f32; b.t * d];
+    let mut stats = vec![EpStats::default(); ep_world];
+    for j in joins {
+        let (r, y, s) = j.join().unwrap();
+        out[r * t_local * d..(r + 1) * t_local * d].copy_from_slice(&y);
+        stats[r] = s;
+    }
+    (out, stats)
+}
+
+fn single_rank(b: &Batch, strategy: Strategy) -> Vec<f32> {
+    let backend = ReferenceExperts::new(b.weights.clone());
+    let mut arena = DispatchArena::new();
+    let (y, _, _, _) = forward_tokens(
+        &backend, strategy, &b.geom, &b.gates, &b.idx, &b.xv, b.t, &mut arena,
+    )
+    .unwrap();
+    y
+}
+
+#[test]
+fn ep_equals_single_rank_all_strategies_and_worlds() {
+    check("ep_equals_single_rank", 12, |rng: &mut Rng| {
+        let skew = rng.below(2) == 0;
+        for ep_world in [1usize, 2, 4] {
+            let b = make_batch(rng, ep_world, 64, skew); // generous cap: no drops
+            for strategy in STRATEGIES {
+                let want = single_rank(&b, strategy);
+                let cfg = EpCfg { strategy, chunk: 0, overlap: true };
+                let (got, _) = run_ep(&b, ep_world, cfg);
+                assert_eq!(got, want, "{strategy} ep={ep_world} skew={skew}");
+            }
+        }
+    });
+}
+
+#[test]
+fn ep_capacity_drops_match_single_rank_bitwise() {
+    // tight capacity: the same rows must be dropped on both paths, and the
+    // surviving accumulation must stay bit-identical
+    check("ep_capacity_drops", 10, |rng: &mut Rng| {
+        for ep_world in [2usize, 4] {
+            let b = make_batch(rng, ep_world, 2, true); // cap 2, skewed: drops
+            for strategy in [Strategy::Loop, Strategy::Grouped] {
+                let want = single_rank(&b, strategy);
+                let (got, stats) = run_ep(
+                    &b, ep_world,
+                    EpCfg { strategy, chunk: 0, overlap: false },
+                );
+                assert_eq!(got, want, "{strategy} ep={ep_world}");
+                let dropped: usize = stats.iter().map(|s| s.dropped_rows).sum();
+                let kept = b.t * b.geom.top_k - dropped;
+                assert!(kept <= b.geom.n_experts * b.geom.cap);
+            }
+        }
+    });
+}
+
+#[test]
+fn ep_chunked_equals_unchunked_under_all_modes() {
+    check("ep_chunking_invariant", 8, |rng: &mut Rng| {
+        let b = make_batch(rng, 2, 64, false);
+        for strategy in STRATEGIES {
+            let want = single_rank(&b, strategy);
+            for chunk in [0usize, 1, 2, 3] {
+                for overlap in [false, true] {
+                    let (got, _) =
+                        run_ep(&b, 2, EpCfg { strategy, chunk, overlap });
+                    assert_eq!(
+                        got, want,
+                        "{strategy} chunk={chunk} overlap={overlap}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn ep_overlap_fraction_reported() {
+    let mut rng = Rng::new(99);
+    // 4 experts per rank, chunk 1 -> 4 rounds: overlap mode must report
+    // overlapped compute; sequential mode must report none.
+    let epr = 4;
+    let b = {
+        let mut b = make_batch(&mut rng, 2, 64, false);
+        // rebuild with fixed expert count for a guaranteed multi-round run
+        let e = 2 * epr;
+        let weights = ExpertWeights::random(&mut rng, e, b.geom.d, 3);
+        let mut idx = Vec::new();
+        let mut gates = Vec::new();
+        for _ in 0..b.t * b.geom.top_k {
+            idx.push(rng.below(e) as i32);
+            gates.push(rng.f32());
+        }
+        b.geom.n_experts = e;
+        b.weights = weights;
+        b.idx = idx;
+        b.gates = gates;
+        b
+    };
+    let (_, stats) = run_ep(&b, 2, EpCfg {
+        strategy: Strategy::MegaBlocks, chunk: 1, overlap: true,
+    });
+    assert_eq!(stats[0].rounds, epr);
+    assert_eq!(
+        stats[0].compute_overlapped, stats[0].compute,
+        "with rounds >= 2 every launch runs under an in-flight shard"
+    );
+    assert!(
+        stats[0].compute > std::time::Duration::ZERO
+            && stats[0].overlap_frac() > 0.0,
+        "multi-round overlapped run must overlap compute with comm"
+    );
+    let (_, stats) = run_ep(&b, 2, EpCfg {
+        strategy: Strategy::MegaBlocks, chunk: 1, overlap: false,
+    });
+    assert_eq!(stats[0].overlap_frac(), 0.0, "sequential mode must not overlap");
+}
+
+#[test]
+fn ep_arena_stays_flat_after_warmup() {
+    // fixed shapes: after the first forward the arena must stop allocating
+    let mut rng = Rng::new(7);
+    let e = 4;
+    let (d, f, t, k) = (3, 5, 8, 2);
+    let weights = ExpertWeights::random(&mut rng, e, d, f);
+    let geom = MoeGeom { d, n_experts: e, top_k: k, cap: 8, tile: 2 };
+    let backend = ReferenceExperts::new(weights.clone());
+    let xv: Vec<f32> = (0..t * d).map(|_| rng.normal()).collect();
+    let mut gates = Vec::new();
+    let mut idx = Vec::new();
+    for _ in 0..t * k {
+        idx.push(rng.below(e) as i32);
+        gates.push(rng.f32());
+    }
+    let (_comm, mut handles) = Comm::new(1);
+    let h = handles.remove(0);
+    let cfg = EpCfg { strategy: Strategy::MegaBlocks, chunk: 0, overlap: true };
+    let x = Tensor::f32(&[t, d], xv);
+    let mut arena = DispatchArena::new();
+    forward_ep(&h, &backend, &cfg, &geom, &gates, &idx, &x, &mut arena).unwrap();
+    let after_warmup = arena.alloc_events();
+    for _ in 0..6 {
+        forward_ep(&h, &backend, &cfg, &geom, &gates, &idx, &x, &mut arena).unwrap();
+    }
+    assert_eq!(
+        arena.alloc_events(),
+        after_warmup,
+        "dispatch arena must not grow after warmup"
+    );
+}
