@@ -1,0 +1,254 @@
+//! Serving bench: LSM constant-state vs attention KV-staircase (Fig. 5,
+//! in serving form), on the artifact-free reference backends.
+//!
+//! Part 1 -- swap cost vs position: advance a single lane to position P,
+//! then time a save_lane + load_lane roundtrip.  The LSM session is a
+//! fixed d-vector, so bytes and time are flat in P; the attention session
+//! is the power-of-two KV staircase, so both climb.
+//!
+//! Part 2 -- engine throughput: the same deterministic Poisson-ish trace
+//! through a 4-lane continuous-batching engine on each backend, with a
+//! preemption quantum so state swapping is actually exercised.  Records
+//! BENCH_serve.json (override the path with BENCH_JSON_OUT) and
+//! schema-checks it by re-reading.  SERVE_SMOKE=1 shrinks everything for
+//! a CI smoke run.
+
+use linear_moe::bench_util::bench;
+use linear_moe::coordinator::metrics::{Summary, Table};
+use linear_moe::inference::{Decoder, LaneState};
+use linear_moe::json;
+use linear_moe::rng::Rng;
+use linear_moe::serve::{
+    poisson_trace, Engine, EngineCfg, RefAttnDecoder, RefLsmDecoder, Request,
+    Sampling, ServeReport,
+};
+use linear_moe::tensor::Tensor;
+
+const VOCAB: usize = 64;
+const SEED: u64 = 11;
+
+/// Feed `pos` tokens into lane 0 so the session reaches that position.
+fn advance<D: Decoder>(dec: &mut D, pos: usize) -> anyhow::Result<()> {
+    dec.reset_lane(0)?;
+    for p in 0..pos {
+        let tok = (p % VOCAB) as i32;
+        dec.decode_step(&Tensor::i32(&[1], vec![tok]), &[p as i32])?;
+    }
+    Ok(())
+}
+
+struct SwapRow {
+    backend: &'static str,
+    pos: usize,
+    state_bytes: usize,
+    swap_us: f64,
+}
+
+fn swap_cost<D: Decoder>(
+    name: &'static str,
+    mut dec: D,
+    positions: &[usize],
+    iters: usize,
+) -> anyhow::Result<Vec<SwapRow>> {
+    let mut rows = Vec::new();
+    for &pos in positions {
+        advance(&mut dec, pos)?;
+        let mut st = LaneState::default();
+        dec.save_lane(0, &mut st)?; // size the buffers once
+        let r = bench(&format!("{name} swap @pos {pos}"), 2, iters, || {
+            dec.save_lane(0, &mut st).unwrap();
+            dec.load_lane(0, &st).unwrap();
+        });
+        rows.push(SwapRow {
+            backend: name,
+            pos,
+            state_bytes: dec.lane_state_bytes(pos),
+            swap_us: r.median_ms * 1e3,
+        });
+    }
+    Ok(rows)
+}
+
+fn serve_requests(n: usize) -> Vec<Request> {
+    let mut rng = Rng::new(SEED ^ 0x5157);
+    let prompt_len = 6;
+    (0..n as u64)
+        .map(|id| Request {
+            id,
+            prompt: (0..prompt_len).map(|_| rng.below(VOCAB) as i32).collect(),
+            max_new: 8 + rng.below(17),
+            eos: None,
+            sampling: Sampling::Greedy,
+            seed: id,
+        })
+        .collect()
+}
+
+fn run_engine<D: Decoder>(dec: D, reqs: &[Request]) -> anyhow::Result<ServeReport> {
+    let mut rng = Rng::new(SEED);
+    let trace = poisson_trace(&mut rng, reqs.len(), 2.0, |id| reqs[id as usize].clone());
+    let cfg = EngineCfg { preempt_after: Some(4), ..Default::default() };
+    Engine::new(dec, cfg).run_trace(&trace)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("SERVE_SMOKE").is_ok();
+    let iters: usize = std::env::var("BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if smoke { 4 } else { 64 });
+
+    // --- Part 1: state swap cost vs decode position --------------------
+    let positions: Vec<usize> =
+        if smoke { vec![16, 32, 64] } else { vec![64, 128, 256, 512, 1024] };
+    let d = if smoke { 16 } else { 64 };
+    let mut swap_rows = swap_cost(
+        "lsm",
+        RefLsmDecoder::new(1, VOCAB, d, SEED),
+        &positions,
+        iters,
+    )?;
+    swap_rows.extend(swap_cost(
+        "attn",
+        RefAttnDecoder::new(1, VOCAB, d, 16, SEED),
+        &positions,
+        iters,
+    )?);
+
+    let lsm_bytes: Vec<usize> = swap_rows
+        .iter()
+        .filter(|r| r.backend == "lsm")
+        .map(|r| r.state_bytes)
+        .collect();
+    let attn_bytes: Vec<usize> = swap_rows
+        .iter()
+        .filter(|r| r.backend == "attn")
+        .map(|r| r.state_bytes)
+        .collect();
+    assert!(
+        lsm_bytes.windows(2).all(|w| w[0] == w[1]),
+        "LSM session bytes must be flat in position: {lsm_bytes:?}"
+    );
+    assert!(
+        attn_bytes.windows(2).all(|w| w[0] <= w[1])
+            && attn_bytes.last() > attn_bytes.first(),
+        "attention KV staircase must grow with position: {attn_bytes:?}"
+    );
+
+    let mut table = Table::new(&["swap", "pos", "state bytes", "median us"]);
+    for r in &swap_rows {
+        table.row(&[
+            r.backend.to_string(),
+            r.pos.to_string(),
+            r.state_bytes.to_string(),
+            format!("{:.2}", r.swap_us),
+        ]);
+    }
+    println!("\n=== Session swap cost vs position (d={d}) ===");
+    table.print();
+
+    // --- Part 2: engine throughput on the same trace -------------------
+    let n = if smoke { 16 } else { 64 };
+    let reqs = serve_requests(n);
+    let mut engine_rows = Vec::new();
+    let mut table = Table::new(&[
+        "engine", "tok/s", "occupancy", "swaps", "swap MiB", "reallocs",
+        "p50 wait", "p95 ttft",
+    ]);
+    let runs: Vec<(&str, ServeReport)> = vec![
+        ("lsm", run_engine(RefLsmDecoder::new(4, VOCAB, d, SEED), &reqs)?),
+        ("attn", run_engine(RefAttnDecoder::new(4, VOCAB, d, 16, SEED), &reqs)?),
+    ];
+    for (name, rep) in &runs {
+        assert_eq!(rep.results.len(), n, "{name}: all requests must finish");
+        let waits: Vec<f64> =
+            rep.results.iter().map(|r| r.queue_wait() as f64).collect();
+        let ttfts: Vec<f64> = rep.results.iter().map(|r| r.ttft() as f64).collect();
+        let (w, t) = (Summary::of(&waits), Summary::of(&ttfts));
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}", rep.tokens_per_sec()),
+            format!("{:.2}", rep.occupancy()),
+            rep.swaps.to_string(),
+            format!("{:.3}", rep.swap_bytes as f64 / (1024.0 * 1024.0)),
+            rep.state_reallocs.to_string(),
+            format!("{:.0}", w.p50),
+            format!("{:.0}", t.p95),
+        ]);
+        engine_rows.push(format!(
+            "    {{\"backend\": \"{name}\", \"requests\": {n}, \"lanes\": 4, \
+             \"tokens_out\": {}, \"tokens_per_sec\": {:.2}, \
+             \"occupancy\": {:.4}, \"steps\": {}, \"swaps\": {}, \
+             \"swap_bytes\": {}, \"state_reallocs\": {}, \
+             \"queue_wait_p50_ticks\": {:.1}, \"ttft_p95_ticks\": {:.1}}}",
+            rep.tokens_out,
+            rep.tokens_per_sec(),
+            rep.occupancy(),
+            rep.steps,
+            rep.swaps,
+            rep.swap_bytes,
+            rep.state_reallocs,
+            w.p50,
+            t.p95,
+        ));
+    }
+    println!("\n=== Continuous-batching engine, {n} requests, 4 lanes ===");
+    table.print();
+
+    // the Fig. 5 contrast: same trace, same swap count regime, but the
+    // attention engine moves far more state per swap
+    let (lsm_rep, attn_rep) = (&runs[0].1, &runs[1].1);
+    if lsm_rep.swaps > 0 && attn_rep.swaps > 0 {
+        assert!(
+            attn_rep.swap_bytes / attn_rep.swaps
+                > lsm_rep.swap_bytes / lsm_rep.swaps,
+            "KV staircase must cost more bytes per swap than constant state"
+        );
+    }
+
+    // --- Emit + schema-check BENCH_serve.json --------------------------
+    let out = std::env::var("BENCH_JSON_OUT")
+        .unwrap_or_else(|_| "../BENCH_serve.json".to_string());
+    let swap_json: Vec<String> = swap_rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"backend\": \"{}\", \"pos\": {}, \"state_bytes\": {}, \
+                 \"swap_us\": {:.4}}}",
+                r.backend, r.pos, r.state_bytes, r.swap_us
+            )
+        })
+        .collect();
+    let json_text = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"smoke\": {smoke},\n  \
+         \"iters\": {iters},\n  \"d\": {d},\n  \"swap_cost\": [\n{}\n  ],\n  \
+         \"engine\": [\n{}\n  ]\n}}\n",
+        swap_json.join(",\n"),
+        engine_rows.join(",\n")
+    );
+    std::fs::write(&out, &json_text)?;
+    println!("wrote {out}");
+
+    let parsed = json::parse(&std::fs::read_to_string(&out)?)?;
+    assert_eq!(parsed.str_field("bench")?, "serve");
+    let swap = parsed.get("swap_cost").and_then(|v| v.as_arr()).expect("swap_cost");
+    assert_eq!(swap.len(), 2 * positions.len());
+    for row in swap {
+        row.str_field("backend")?;
+        row.usize_field("pos")?;
+        row.usize_field("state_bytes")?;
+        assert!(row.get("swap_us").and_then(|v| v.as_f64()).is_some());
+    }
+    let eng = parsed.get("engine").and_then(|v| v.as_arr()).expect("engine");
+    assert_eq!(eng.len(), 2);
+    for row in eng {
+        row.str_field("backend")?;
+        row.usize_field("tokens_out")?;
+        row.usize_field("swaps")?;
+        assert!(row.get("tokens_per_sec").and_then(|v| v.as_f64()).is_some());
+        assert!(row.get("occupancy").and_then(|v| v.as_f64()).is_some());
+        assert!(row.get("ttft_p95_ticks").and_then(|v| v.as_f64()).is_some());
+    }
+    println!("schema check passed");
+    Ok(())
+}

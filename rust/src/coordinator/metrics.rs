@@ -68,6 +68,35 @@ pub struct HealthSnapshot {
     pub traffic: CommTraffic,
 }
 
+/// Order statistics over a set of per-request serving measurements
+/// (queue wait, TTFT, tokens) -- what the serve CLI and bench report.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        Summary {
+            n,
+            mean: sorted.iter().sum::<f64>() / n as f64,
+            p50: sorted[n / 2],
+            p95: sorted[(((n as f64) * 0.95) as usize).min(n - 1)],
+            max: sorted[n - 1],
+        }
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct LossCurve {
     pub label: String,
@@ -229,6 +258,17 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn summary_order_stats() {
+        let s = Summary::of(&[4.0, 1.0, 3.0, 2.0, 100.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 22.0).abs() < 1e-9);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p95, 100.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(Summary::of(&[]).n, 0);
+    }
 
     #[test]
     fn loss_curve_tail_mean() {

@@ -7,12 +7,17 @@
 //! (decode_..._n{128,256,...} artifacts): step t runs the smallest cache
 //! >= t, mirroring how paged/banded serving systems grow the cache, and
 //! giving per-token cost that grows with position -- the Fig. 5 contrast.
+//!
+//! The `Decoder` trait abstracts the batched step function plus per-lane
+//! state check-in/out, so the continuous-batching serving engine
+//! (`crate::serve`) can drive the PJRT decoders and the artifact-free
+//! reference backends through one interface.
 
 use anyhow::Result;
 use std::rc::Rc;
 
-use crate::runtime::{Executable, Runtime, Variant};
-use crate::tensor::{Bundle, Tensor};
+use crate::runtime::{Executable, LeafSpec, Runtime, Variant};
+use crate::tensor::{Bundle, Data, Tensor};
 
 pub struct DecodeStats {
     pub tokens: usize,
@@ -21,27 +26,270 @@ pub struct DecodeStats {
     pub state_bytes: usize,
 }
 
+/// Zero tensor matching a manifest leaf spec (dtype-dispatched).
+pub fn zeros_for_spec(spec: &LeafSpec) -> Tensor {
+    if spec.dtype.contains("int") {
+        Tensor::i32(&spec.shape, vec![0; spec.numel()])
+    } else {
+        Tensor::zeros(&spec.shape)
+    }
+}
+
 /// Decode state for one model: per-layer tensors in manifest order.
 pub struct DecodeState {
     pub tensors: Vec<Tensor>,
 }
 
-fn init_state(var: &Variant, spec: &crate::runtime::ArtifactSpec, n_params: usize) -> DecodeState {
+impl DecodeState {
+    /// Fresh zero state from manifest leaf specs.
+    pub fn from_specs(specs: &[LeafSpec]) -> Self {
+        DecodeState { tensors: specs.iter().map(zeros_for_spec).collect() }
+    }
+
+    /// Zero all state tensors in place (keeps shapes, dtypes, allocations).
+    pub fn reset(&mut self) {
+        for t in &mut self.tensors {
+            t.fill_zero();
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+}
+
+fn init_state(spec: &crate::runtime::ArtifactSpec, n_params: usize) -> DecodeState {
     // state leaves sit between params and (token, pos) in the arg list.
     let n_args = spec.args.len();
-    let state_specs = &spec.args[n_params..n_args - 2];
-    let tensors = state_specs
+    DecodeState::from_specs(&spec.args[n_params..n_args - 2])
+}
+
+/// Grow decode-state tensors into the shapes of `specs`, preserving dtype
+/// and contents.  Same-shape tensors (constant-size LSM states, position
+/// counters) ride along unchanged; tensors whose shape grows (KV caches)
+/// get the overlapping hyperrectangle of the old contents copied into the
+/// front of a zeroed tensor, for any rank and both dtypes.
+pub fn grow_state(old: &[Tensor], specs: &[LeafSpec]) -> Result<Vec<Tensor>> {
+    anyhow::ensure!(
+        old.len() == specs.len(),
+        "state arity changed across staircase: {} -> {}",
+        old.len(),
+        specs.len()
+    );
+    old.iter().zip(specs).map(|(o, s)| grow_tensor(o, s)).collect()
+}
+
+fn grow_tensor(old: &Tensor, spec: &LeafSpec) -> Result<Tensor> {
+    let want_int = spec.dtype.contains("int");
+    anyhow::ensure!(
+        old.is_f32() != want_int,
+        "state dtype changed across staircase: {} -> {}",
+        if old.is_f32() { "f32" } else { "i32" },
+        spec.dtype
+    );
+    if old.shape == spec.shape {
+        return Ok(old.clone());
+    }
+    anyhow::ensure!(
+        old.shape.len() == spec.shape.len() && !old.shape.is_empty(),
+        "cannot grow state {:?} -> {:?}",
+        old.shape,
+        spec.shape
+    );
+    let mut new = zeros_for_spec(spec);
+    let rank = spec.shape.len();
+    let min: Vec<usize> = old
+        .shape
         .iter()
-        .map(|s| {
-            if s.dtype.contains("int") {
-                Tensor::i32(&s.shape, vec![0; s.numel()])
-            } else {
-                Tensor::zeros(&s.shape)
-            }
-        })
+        .zip(&spec.shape)
+        .map(|(&a, &b)| a.min(b))
         .collect();
-    let _ = var;
-    DecodeState { tensors }
+    let row = min[rank - 1];
+    let outer: usize = min[..rank - 1].iter().product();
+    let strides = |shape: &[usize]| -> Vec<usize> {
+        (0..rank - 1)
+            .map(|d| shape[d + 1..].iter().product())
+            .collect()
+    };
+    let so = strides(&old.shape);
+    let sn = strides(&spec.shape);
+    let mut idx = vec![0usize; rank - 1];
+    if row > 0 {
+        for _ in 0..outer {
+            let off_o: usize = idx.iter().zip(&so).map(|(i, s)| i * s).sum();
+            let off_n: usize = idx.iter().zip(&sn).map(|(i, s)| i * s).sum();
+            match (&old.data, &mut new.data) {
+                (Data::F32(src), Data::F32(dst)) => {
+                    dst[off_n..off_n + row].copy_from_slice(&src[off_o..off_o + row])
+                }
+                (Data::I32(src), Data::I32(dst)) => {
+                    dst[off_n..off_n + row].copy_from_slice(&src[off_o..off_o + row])
+                }
+                _ => unreachable!("dtype checked above"),
+            }
+            for d in (0..rank - 1).rev() {
+                idx[d] += 1;
+                if idx[d] < min[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+    Ok(new)
+}
+
+// ---------------------------------------------------------------------------
+// Lane state: one request's slice of the batched decode state.
+// ---------------------------------------------------------------------------
+
+/// One lane's recurrent state, checked out of (or into) a batched decoder:
+/// the per-state-tensor slabs at a fixed batch index, shapes without the
+/// leading batch dim.  Buffers are reused across check-outs when shapes
+/// match, so steady-state swapping allocates nothing (`reallocs` counts
+/// the times a slot had to be (re)allocated).
+#[derive(Clone, Debug, Default)]
+pub struct LaneState {
+    pub tensors: Vec<Tensor>,
+    pub reallocs: u64,
+}
+
+impl LaneState {
+    pub fn size_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    /// Slot `i` as a tensor of `shape`/dtype, reusing the existing buffer
+    /// when it already matches (no realloc on the steady-state swap path).
+    pub fn slot(&mut self, i: usize, shape: &[usize], is_f32: bool) -> &mut Tensor {
+        while self.tensors.len() <= i {
+            self.tensors.push(Tensor::f32(&[0], vec![]));
+        }
+        let stale = self.tensors[i].shape.as_slice() != shape
+            || self.tensors[i].is_f32() != is_f32;
+        if stale {
+            self.reallocs += 1;
+            self.tensors[i] = if is_f32 {
+                Tensor::zeros(shape)
+            } else {
+                Tensor::i32(shape, vec![0; shape.iter().product()])
+            };
+        }
+        &mut self.tensors[i]
+    }
+}
+
+/// Copy lane `lane` of each (B, ...)-shaped state tensor into `out`.
+pub fn save_lane_slices(
+    tensors: &[Tensor],
+    batch: usize,
+    lane: usize,
+    out: &mut LaneState,
+) -> Result<()> {
+    anyhow::ensure!(lane < batch, "lane {lane} out of range (batch {batch})");
+    for (i, t) in tensors.iter().enumerate() {
+        anyhow::ensure!(
+            !t.shape.is_empty() && t.shape[0] == batch,
+            "state tensor {i} ({:?}) is not lane-separable over batch {batch}",
+            t.shape
+        );
+        let n = t.numel() / batch;
+        let dst = out.slot(i, &t.shape[1..], t.is_f32());
+        match (&t.data, &mut dst.data) {
+            (Data::F32(src), Data::F32(d)) => {
+                d.copy_from_slice(&src[lane * n..(lane + 1) * n])
+            }
+            (Data::I32(src), Data::I32(d)) => {
+                d.copy_from_slice(&src[lane * n..(lane + 1) * n])
+            }
+            _ => unreachable!("slot dtype matches source"),
+        }
+    }
+    out.tensors.truncate(tensors.len());
+    Ok(())
+}
+
+/// Copy a saved lane state back into lane `lane` of the batched tensors.
+pub fn load_lane_slices(
+    tensors: &mut [Tensor],
+    batch: usize,
+    lane: usize,
+    src: &LaneState,
+) -> Result<()> {
+    anyhow::ensure!(lane < batch, "lane {lane} out of range (batch {batch})");
+    anyhow::ensure!(
+        src.tensors.len() == tensors.len(),
+        "lane state arity {} != decoder state arity {}",
+        src.tensors.len(),
+        tensors.len()
+    );
+    for (i, (t, s)) in tensors.iter_mut().zip(&src.tensors).enumerate() {
+        anyhow::ensure!(
+            !t.shape.is_empty() && t.shape[0] == batch && t.shape[1..] == s.shape[..],
+            "lane state tensor {i} shape {:?} does not fit decoder state {:?}",
+            s.shape,
+            t.shape
+        );
+        let n = t.numel() / batch;
+        match (&mut t.data, &s.data) {
+            (Data::F32(d), Data::F32(v)) => {
+                d[lane * n..(lane + 1) * n].copy_from_slice(v)
+            }
+            (Data::I32(d), Data::I32(v)) => {
+                d[lane * n..(lane + 1) * n].copy_from_slice(v)
+            }
+            _ => anyhow::bail!("lane state tensor {i} dtype mismatch"),
+        }
+    }
+    Ok(())
+}
+
+/// Zero lane `lane` of each (B, ...)-shaped state tensor in place.
+pub fn zero_lane_slices(tensors: &mut [Tensor], batch: usize, lane: usize) -> Result<()> {
+    anyhow::ensure!(lane < batch, "lane {lane} out of range (batch {batch})");
+    for (i, t) in tensors.iter_mut().enumerate() {
+        anyhow::ensure!(
+            !t.shape.is_empty() && t.shape[0] == batch,
+            "state tensor {i} ({:?}) is not lane-separable over batch {batch}",
+            t.shape
+        );
+        let n = t.numel() / batch;
+        match &mut t.data {
+            Data::F32(v) => v[lane * n..(lane + 1) * n].fill(0.0),
+            Data::I32(v) => v[lane * n..(lane + 1) * n].fill(0),
+        }
+    }
+    Ok(())
+}
+
+/// Batched autoregressive step function with per-lane state check-in/out:
+/// the contract between decode backends (PJRT artifacts or the pure-Rust
+/// reference models) and the continuous-batching serving engine.
+///
+/// Per-lane computation must be lane-independent: a lane's logits depend
+/// only on that lane's state, token, and position, so a request's token
+/// stream is bitwise identical whichever batch its lanes ride in.
+pub trait Decoder {
+    /// Fixed decode width (number of batch lanes).
+    fn lanes(&self) -> usize;
+
+    /// One step for all lanes: `tokens` (B,) i32, per-lane positions;
+    /// returns logits (B, V).  Idle lanes feed a pad token and pos 0;
+    /// their rows are ignored by the caller.
+    fn decode_step(&mut self, tokens: &Tensor, pos: &[i32]) -> Result<Tensor>;
+
+    /// Check lane `lane`'s recurrent state out into `out` (buffer reused).
+    fn save_lane(&self, lane: usize, out: &mut LaneState) -> Result<()>;
+
+    /// Check a saved state back into lane `lane`.
+    fn load_lane(&mut self, lane: usize, src: &LaneState) -> Result<()>;
+
+    /// Zero lane `lane` (fresh request; no copy).
+    fn reset_lane(&mut self, lane: usize) -> Result<()>;
+
+    /// Modeled bytes of one lane's recurrent state when that lane is at
+    /// position `pos` (constant for LSM; staircase for attention KV).
+    fn lane_state_bytes(&self, pos: usize) -> usize;
 }
 
 /// Pure-LSM decoder: one artifact, constant state.
@@ -58,7 +306,7 @@ impl LsmDecoder {
         let exe = rt.load(&format!("decode_{tag}_b{batch}"))?;
         let params = rt.init_params(tag, 0)?;
         let var = rt.manifest.variant(tag)?.clone();
-        let state = init_state(&var, &exe.spec, params.tensors.len());
+        let state = init_state(&exe.spec, params.tensors.len());
         Ok(LsmDecoder { batch, exe, params, state, var })
     }
 
@@ -82,17 +330,43 @@ impl LsmDecoder {
     }
 
     pub fn reset(&mut self) {
-        for t in &mut self.state.tensors {
-            *t = if t.is_f32() {
-                Tensor::zeros(&t.shape)
-            } else {
-                Tensor::i32(&t.shape, vec![0; t.numel()])
-            };
-        }
+        self.state.reset();
     }
 
     pub fn state_bytes(&self) -> usize {
-        self.state.tensors.iter().map(|t| t.size_bytes()).sum()
+        self.state.size_bytes()
+    }
+}
+
+impl Decoder for LsmDecoder {
+    fn lanes(&self) -> usize {
+        self.batch
+    }
+
+    fn decode_step(&mut self, tokens: &Tensor, pos: &[i32]) -> Result<Tensor> {
+        anyhow::ensure!(pos.len() == self.batch, "pos len != batch");
+        // The decode artifact takes one scalar step counter; the LSM
+        // recurrence is position-invariant (all history lives in the
+        // constant-size state), so the counter may run ahead for lanes
+        // that joined the batch late.
+        let p = pos.iter().copied().max().unwrap_or(0);
+        self.step(tokens, p)
+    }
+
+    fn save_lane(&self, lane: usize, out: &mut LaneState) -> Result<()> {
+        save_lane_slices(&self.state.tensors, self.batch, lane, out)
+    }
+
+    fn load_lane(&mut self, lane: usize, src: &LaneState) -> Result<()> {
+        load_lane_slices(&mut self.state.tensors, self.batch, lane, src)
+    }
+
+    fn reset_lane(&mut self, lane: usize) -> Result<()> {
+        zero_lane_slices(&mut self.state.tensors, self.batch, lane)
+    }
+
+    fn lane_state_bytes(&self, _pos: usize) -> usize {
+        self.state.size_bytes() / self.batch
     }
 }
 
@@ -114,7 +388,7 @@ impl AttnDecoder {
         }
         let params = rt.init_params(tag, 0)?;
         let var = rt.manifest.variant(tag)?.clone();
-        let state = init_state(&var, &exes[0].1.spec, params.tensors.len());
+        let state = init_state(&exes[0].1.spec, params.tensors.len());
         Ok(AttnDecoder {
             batch,
             exes,
@@ -125,35 +399,20 @@ impl AttnDecoder {
         })
     }
 
-    /// Grow the KV cache into the next staircase size, copying history.
-    fn grow_to(&mut self, idx: usize) {
-        let (new_n, exe) = &self.exes[idx];
-        let spec = &exe.spec;
+    /// State leaf specs of staircase entry `idx`.
+    fn state_specs(&self, idx: usize) -> &[LeafSpec] {
+        let spec = &self.exes[idx].1.spec;
         let n_params = self.params.tensors.len();
-        let state_specs = &spec.args[n_params..spec.args.len() - 2];
-        let mut new_tensors = Vec::with_capacity(self.state.tensors.len());
-        for (old, s) in self.state.tensors.iter().zip(state_specs) {
-            // caches are (B, H, N, Dh): copy old rows into the front.
-            let mut t = Tensor::zeros(&s.shape);
-            if old.shape.len() == 4 && s.shape.len() == 4 {
-                let (b, h, n_old, d) =
-                    (old.shape[0], old.shape[1], old.shape[2], old.shape[3]);
-                let n_new = s.shape[2];
-                let src = old.as_f32().unwrap();
-                let dst = t.as_f32_mut().unwrap();
-                for bi in 0..b * h {
-                    for r in 0..n_old.min(n_new) {
-                        let so = (bi * n_old + r) * d;
-                        let dofs = (bi * n_new + r) * d;
-                        dst[dofs..dofs + d].copy_from_slice(&src[so..so + d]);
-                    }
-                }
-            }
-            new_tensors.push(t);
-        }
-        self.state.tensors = new_tensors;
+        &spec.args[n_params..spec.args.len() - 2]
+    }
+
+    /// Grow the KV cache into the next staircase size, preserving dtype
+    /// and copying history for every state tensor.
+    fn grow_to(&mut self, idx: usize) -> Result<()> {
+        let specs = self.state_specs(idx).to_vec();
+        self.state.tensors = grow_state(&self.state.tensors, &specs)?;
         self.cur = idx;
-        let _ = new_n;
+        Ok(())
     }
 
     pub fn step(&mut self, token: &Tensor, pos: i32) -> Result<Tensor> {
@@ -161,7 +420,7 @@ impl AttnDecoder {
         while pos as usize >= self.exes[self.cur].0 {
             let next = self.cur + 1;
             anyhow::ensure!(next < self.exes.len(), "decode length exceeds staircase");
-            self.grow_to(next);
+            self.grow_to(next)?;
         }
         let exe = self.exes[self.cur].1.clone();
         let pos_t = Tensor::scalar_i32(pos);
@@ -177,11 +436,53 @@ impl AttnDecoder {
     }
 
     pub fn state_bytes(&self) -> usize {
-        self.state.tensors.iter().map(|t| t.size_bytes()).sum()
+        self.state.size_bytes()
     }
 }
 
-/// Greedy argmax over (B, V) logits -> (B,) tokens.
+impl Decoder for AttnDecoder {
+    fn lanes(&self) -> usize {
+        self.batch
+    }
+
+    fn decode_step(&mut self, tokens: &Tensor, pos: &[i32]) -> Result<Tensor> {
+        anyhow::ensure!(pos.len() == self.batch, "pos len != batch");
+        // The attention artifacts write KV row `pos` for the whole batch,
+        // so continuous batching over PJRT attention requires aligned
+        // lanes; the reference backend (`serve::refmodel`) lifts this.
+        let p = pos[0];
+        anyhow::ensure!(
+            pos.iter().all(|&x| x == p),
+            "AttnDecoder requires all lanes at the same position (scalar-pos artifact)"
+        );
+        self.step(tokens, p)
+    }
+
+    fn save_lane(&self, lane: usize, out: &mut LaneState) -> Result<()> {
+        save_lane_slices(&self.state.tensors, self.batch, lane, out)
+    }
+
+    fn load_lane(&mut self, lane: usize, src: &LaneState) -> Result<()> {
+        load_lane_slices(&mut self.state.tensors, self.batch, lane, src)
+    }
+
+    fn reset_lane(&mut self, lane: usize) -> Result<()> {
+        zero_lane_slices(&mut self.state.tensors, self.batch, lane)
+    }
+
+    fn lane_state_bytes(&self, pos: usize) -> usize {
+        let idx = self
+            .exes
+            .iter()
+            .position(|(n, _)| pos < *n)
+            .unwrap_or(self.exes.len() - 1);
+        let bytes: usize = self.state_specs(idx).iter().map(|s| s.numel() * 4).sum();
+        bytes / self.batch
+    }
+}
+
+/// Greedy argmax over (B, V) logits -> (B,) tokens.  Ties break to the
+/// first (lowest) index -- the serving sampler's greedy path matches.
 pub fn greedy(logits: &Tensor) -> Result<Tensor> {
     let v = *logits.shape.last().unwrap();
     let b = logits.numel() / v;
@@ -204,10 +505,91 @@ pub fn greedy(logits: &Tensor) -> Result<Tensor> {
 mod tests {
     use super::*;
 
+    fn spec(shape: &[usize], dtype: &str) -> LeafSpec {
+        LeafSpec { path: String::new(), shape: shape.to_vec(), dtype: dtype.to_string() }
+    }
+
     #[test]
     fn greedy_picks_argmax_rows() {
         let l = Tensor::f32(&[2, 3], vec![0.1, 0.9, 0.0, 2.0, -1.0, 1.0]);
         let g = greedy(&l).unwrap();
         assert_eq!(g.as_i32().unwrap(), &[1, 0]);
+    }
+
+    #[test]
+    fn grow_state_copies_4d_cache_rows() {
+        // (B=2, H=1, N=2, D=2) -> N=4: old rows land in front, zeros after
+        let old = Tensor::f32(&[2, 1, 2, 2], (1..=8).map(|x| x as f32).collect());
+        let grown = grow_state(&[old], &[spec(&[2, 1, 4, 2], "float32")]).unwrap();
+        assert_eq!(grown[0].shape, vec![2, 1, 4, 2]);
+        assert_eq!(
+            grown[0].as_f32().unwrap(),
+            &[1., 2., 3., 4., 0., 0., 0., 0., 5., 6., 7., 8., 0., 0., 0., 0.]
+        );
+    }
+
+    #[test]
+    fn grow_state_preserves_same_shape_int_state() {
+        // regression: integer-typed and non-4D state tensors used to be
+        // silently replaced with f32 zeros on staircase growth
+        let pos = Tensor::i32(&[2], vec![7, 9]);
+        let grown = grow_state(&[pos.clone()], &[spec(&[2], "int32")]).unwrap();
+        assert_eq!(grown[0], pos);
+    }
+
+    #[test]
+    fn grow_state_preserves_same_shape_non4d_f32() {
+        let s = Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let grown = grow_state(&[s.clone()], &[spec(&[2, 3], "float32")]).unwrap();
+        assert_eq!(grown[0], s);
+    }
+
+    #[test]
+    fn grow_state_grows_int_cache_with_dtype() {
+        let old = Tensor::i32(&[2, 2], vec![1, 2, 3, 4]);
+        let grown = grow_state(&[old], &[spec(&[2, 4], "int32")]).unwrap();
+        assert!(!grown[0].is_f32(), "dtype must be preserved");
+        assert_eq!(grown[0].as_i32().unwrap(), &[1, 2, 0, 0, 3, 4, 0, 0]);
+    }
+
+    #[test]
+    fn grow_state_rejects_dtype_change() {
+        let old = Tensor::i32(&[2], vec![1, 2]);
+        assert!(grow_state(&[old], &[spec(&[4], "float32")]).is_err());
+    }
+
+    #[test]
+    fn lane_slices_roundtrip() {
+        let mut tensors = vec![
+            Tensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]),
+            Tensor::i32(&[2, 2], vec![10, 11, 12, 13]),
+        ];
+        let mut lane = LaneState::default();
+        save_lane_slices(&tensors, 2, 1, &mut lane).unwrap();
+        assert_eq!(lane.tensors[0].as_f32().unwrap(), &[4., 5., 6.]);
+        assert_eq!(lane.tensors[1].as_i32().unwrap(), &[12, 13]);
+        assert_eq!(lane.reallocs, 2);
+        zero_lane_slices(&mut tensors, 2, 1).unwrap();
+        assert_eq!(tensors[0].as_f32().unwrap(), &[1., 2., 3., 0., 0., 0.]);
+        load_lane_slices(&mut tensors, 2, 1, &lane).unwrap();
+        assert_eq!(tensors[0].as_f32().unwrap(), &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(tensors[1].as_i32().unwrap(), &[10, 11, 12, 13]);
+        // steady state: a second save reuses the buffers
+        save_lane_slices(&tensors, 2, 0, &mut lane).unwrap();
+        assert_eq!(lane.reallocs, 2);
+        assert_eq!(lane.tensors[0].as_f32().unwrap(), &[1., 2., 3.]);
+    }
+
+    #[test]
+    fn decode_state_reset_zeroes_in_place() {
+        let mut st = DecodeState {
+            tensors: vec![
+                Tensor::f32(&[2], vec![1., 2.]),
+                Tensor::i32(&[2], vec![3, 4]),
+            ],
+        };
+        st.reset();
+        assert_eq!(st.tensors[0].as_f32().unwrap(), &[0., 0.]);
+        assert_eq!(st.tensors[1].as_i32().unwrap(), &[0, 0]);
     }
 }

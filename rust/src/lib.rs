@@ -20,5 +20,6 @@ pub mod memcost;
 pub mod data;
 pub mod coordinator;
 pub mod inference;
+pub mod serve;
 pub mod eval;
 pub mod bench_util;

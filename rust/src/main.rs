@@ -23,9 +23,12 @@ use linear_moe::coordinator::{checkpoint, metrics};
 use linear_moe::rng::Rng;
 use linear_moe::data;
 use linear_moe::fault::FaultPlan;
-use linear_moe::inference::{greedy, LsmDecoder};
+use linear_moe::inference::{greedy, Decoder, LsmDecoder};
 use linear_moe::memcost;
 use linear_moe::runtime::Runtime;
+use linear_moe::serve::{
+    poisson_trace, Engine, EngineCfg, RefLsmDecoder, Request, Sampling,
+};
 use linear_moe::tensor::Tensor;
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -62,11 +65,12 @@ fn main() -> Result<()> {
     match cmd {
         "train" => train(&dir, &flags),
         "infer" => infer(&dir, &flags),
+        "serve" => serve_cmd(&dir, &flags),
         "eval" => eval_cmd(&dir, &flags),
         "show-config" => show_config(&dir, &flags),
         _ => {
             println!(
-                "linear-moe <train|infer|eval|show-config> [--flags]\n\
+                "linear-moe <train|infer|serve|eval|show-config> [--flags]\n\
                  train:  --tag tiny_gla --steps 20 --lr 1e-3 --batch 2 --seq 128 \
                  [--dp N] [--grad-accum N] [--save ckpt.bin] [--curve out.csv]\n\
                  \x20       [--save-every K] [--max-restarts N] [--comm-timeout-ms MS]\n\
@@ -75,6 +79,10 @@ fn main() -> Result<()> {
                  [--moe-chunk E] [--moe-overlap true|false]\n\
                  \x20       (--ep runs the expert-parallel MoE engine over N ranks)\n\
                  infer:  --tag tiny_bla --batch 4 --len 64\n\
+                 serve:  --tag tiny_bla --requests 32 --batch 4 --max-new 32 \
+                 [--prompt-len 8] [--arrival-gap 2.0]\n\
+                 \x20       [--temp T] [--top-k K] [--preempt-after Q] \
+                 [--max-pending N] [--seed S] [--backend auto|ref|pjrt]\n\
                  eval:   --tag tiny_gla --batch 2 --seq 128 [--batches 8]\n\
                  show-config: [--tag tiny_gla] -- print variants + memory model"
             );
@@ -305,6 +313,133 @@ fn infer(dir: &str, f: &HashMap<String, String>) -> Result<()> {
          ({:.1} tok/s/lane); state {} KiB (constant)",
         len as f64 / dt,
         dec.state_bytes() / 1024
+    );
+    Ok(())
+}
+
+/// Continuous-batching serving demo: a Poisson-ish arrival trace of
+/// synthetic requests through the session-pool engine.  Uses the PJRT
+/// LSM decoder when artifacts are available (or --backend pjrt), else
+/// falls back to the artifact-free reference LSM backend.
+fn serve_cmd(dir: &str, f: &HashMap<String, String>) -> Result<()> {
+    let tag: String = flag(f, "tag", "tiny_bla".to_string());
+    let requests: usize = flag(f, "requests", 32);
+    let batch: usize = flag(f, "batch", 4);
+    let max_new: usize = flag(f, "max-new", 32);
+    let prompt_len: usize = flag(f, "prompt-len", 8);
+    let gap: f64 = flag(f, "arrival-gap", 2.0);
+    let temp: f32 = flag(f, "temp", 0.0);
+    let top_k: usize = flag(f, "top-k", 0);
+    let quantum: u64 = flag(f, "preempt-after", 0);
+    let max_pending: usize = flag(f, "max-pending", 1024);
+    let seed: u64 = flag(f, "seed", 7);
+    let backend: String = flag(f, "backend", "auto".to_string());
+    anyhow::ensure!(batch >= 1 && requests >= 1 && prompt_len >= 1 && max_new >= 1);
+    let sampling = if top_k > 0 {
+        Sampling::TopK { k: top_k, temp: temp.max(1e-3) }
+    } else if temp > 0.0 {
+        Sampling::Temperature { temp }
+    } else {
+        Sampling::Greedy
+    };
+    let cfg = EngineCfg {
+        max_pending,
+        preempt_after: (quantum > 0).then_some(quantum),
+        ..Default::default()
+    };
+
+    let pjrt = match backend.as_str() {
+        "ref" => None,
+        _ => Runtime::new(dir)
+            .and_then(|rt| {
+                let dec = LsmDecoder::new(&rt, &tag, batch)?;
+                Ok((dec, rt))
+            })
+            .map_err(|e| {
+                if backend == "pjrt" {
+                    eprintln!("error: PJRT backend requested but unavailable: {e:#}");
+                }
+                e
+            })
+            .ok(),
+    };
+    match pjrt {
+        Some((dec, rt)) => {
+            let vocab = rt.manifest.variant(&tag)?.config.vocab;
+            println!("serve: PJRT LSM decoder, tag {tag}, {batch} lanes");
+            drive_serve(dec, vocab, requests, prompt_len, max_new, gap, sampling, seed, cfg)
+        }
+        None if backend == "pjrt" => anyhow::bail!("--backend pjrt needs artifacts"),
+        None => {
+            println!(
+                "serve: reference LSM backend ({batch} lanes; no artifacts \
+                 or --backend ref)"
+            );
+            let dec = RefLsmDecoder::new(batch, 64, 16, seed);
+            drive_serve(dec, 64, requests, prompt_len, max_new, gap, sampling, seed, cfg)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn drive_serve<D: Decoder>(
+    dec: D,
+    vocab: usize,
+    requests: usize,
+    prompt_len: usize,
+    max_new: usize,
+    gap: f64,
+    sampling: Sampling,
+    seed: u64,
+    cfg: EngineCfg,
+) -> Result<()> {
+    let mut rng = Rng::new(seed);
+    let mut prompt_rng = Rng::new(seed ^ 0xABCD);
+    let trace = poisson_trace(&mut rng, requests, gap, |id| Request {
+        id,
+        prompt: (0..prompt_len)
+            .map(|_| prompt_rng.below(vocab) as i32)
+            .collect(),
+        max_new,
+        eos: None,
+        sampling,
+        seed: seed.wrapping_add(id),
+    });
+    let mut engine = Engine::new(dec, cfg);
+    let report = engine.run_trace(&trace)?;
+    let waits: Vec<f64> = report.results.iter().map(|r| r.queue_wait() as f64).collect();
+    let ttfts: Vec<f64> = report.results.iter().map(|r| r.ttft() as f64).collect();
+    let wait = metrics::Summary::of(&waits);
+    let ttft = metrics::Summary::of(&ttfts);
+    println!(
+        "served {} requests, {} tokens in {:.3}s ({:.0} tok/s; {} decoder steps)",
+        report.results.len(),
+        report.tokens_out,
+        report.wall_secs,
+        report.tokens_per_sec(),
+        report.steps
+    );
+    println!(
+        "occupancy {:.2}/{} lanes  swaps {} ({} KiB)  state reallocs {}  \
+         bounced submits {}",
+        report.occupancy(),
+        engine.dec.lanes(),
+        report.swaps,
+        report.swap_bytes / 1024,
+        report.state_reallocs,
+        report.rejected
+    );
+    println!(
+        "queue wait ticks: mean {:.1} p50 {:.0} p95 {:.0} max {:.0}",
+        wait.mean, wait.p50, wait.p95, wait.max
+    );
+    println!(
+        "ttft ticks:       mean {:.1} p50 {:.0} p95 {:.0} max {:.0}",
+        ttft.mean, ttft.p50, ttft.p95, ttft.max
+    );
+    println!(
+        "per-lane state {} B (constant in position for LSM)",
+        engine.dec.lane_state_bytes(prompt_len + max_new)
     );
     Ok(())
 }

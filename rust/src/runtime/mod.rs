@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-pub use manifest::{ArtifactSpec, Manifest, ModelConfig, Variant};
+pub use manifest::{ArtifactSpec, LeafSpec, Manifest, ModelConfig, Variant};
 
 use crate::tensor::{Bundle, Tensor};
 

@@ -1,0 +1,321 @@
+//! Continuous-batching decode engine.
+//!
+//! A fixed-width batch of decode lanes is backed by a pool of per-request
+//! sessions.  Each tick the engine ingests arrivals into the bounded
+//! queue (backpressure), admits sessions into idle lanes (preempted
+//! sessions resume first, FIFO), runs one `Decoder` step for the whole
+//! batch, and retires or preempts lanes.  Prefill runs prompt tokens
+//! through the same step loop before a lane goes live; admission of a
+//! fresh request is a zero-copy lane reset, and state swaps go through
+//! the `StateArena` free-list so steady state allocates nothing.
+//!
+//! Because per-lane computation is lane-independent (the `Decoder`
+//! contract), every request's token stream is bitwise identical to
+//! running it alone single-stream (`run_one`), whatever the interleaving.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::inference::Decoder;
+use crate::tensor::Tensor;
+
+use super::queue::{Arrival, BoundedQueue, Request};
+use super::session::{Session, StateArena};
+
+#[derive(Clone, Debug)]
+pub struct EngineCfg {
+    /// queue depth before submissions bounce (backpressure)
+    pub max_pending: usize,
+    /// decode-step quantum after which a lane is swapped out for waiting
+    /// work (None = run every request to completion)
+    pub preempt_after: Option<u64>,
+    /// safety stop for runaway traces
+    pub max_ticks: u64,
+}
+
+impl Default for EngineCfg {
+    fn default() -> Self {
+        EngineCfg { max_pending: 1024, preempt_after: None, max_ticks: 10_000_000 }
+    }
+}
+
+/// Final per-request record (ticks are engine steps, deterministic).
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub arrival_tick: u64,
+    pub admit_tick: u64,
+    pub first_token_tick: u64,
+    pub finish_tick: u64,
+    pub preemptions: u32,
+}
+
+impl RequestResult {
+    /// Ticks spent queued before first entering a lane.
+    pub fn queue_wait(&self) -> u64 {
+        self.admit_tick - self.arrival_tick
+    }
+
+    /// Time-to-first-token in ticks from arrival.
+    pub fn ttft(&self) -> u64 {
+        self.first_token_tick - self.arrival_tick
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeReport {
+    pub results: Vec<RequestResult>,
+    /// engine clock at the end of the trace
+    pub ticks: u64,
+    /// decoder step invocations (== ticks that ran a batch)
+    pub steps: u64,
+    /// sum over steps of the number of live lanes
+    pub active_lane_steps: u64,
+    pub tokens_out: u64,
+    pub wall_secs: f64,
+    /// state check-ins/outs (preemption swaps; fresh admits are resets)
+    pub swaps: u64,
+    pub swap_bytes: u64,
+    /// LaneState buffer (re)allocations across the whole run
+    pub state_reallocs: u64,
+    /// bounced submit attempts (backpressure)
+    pub rejected: u64,
+}
+
+impl ServeReport {
+    /// Mean live lanes per decoder step (> 1 means batching is paying).
+    pub fn occupancy(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.active_lane_steps as f64 / self.steps as f64
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / self.wall_secs
+    }
+}
+
+pub struct Engine<D: Decoder> {
+    pub dec: D,
+    cfg: EngineCfg,
+    queue: BoundedQueue<Session>,
+    /// preempted sessions waiting to resume; served before fresh admits
+    ready: VecDeque<Session>,
+    lanes: Vec<Option<Session>>,
+    arena: StateArena,
+    tick: u64,
+    steps: u64,
+    active_lane_steps: u64,
+    swaps: u64,
+    swap_bytes: u64,
+    results: Vec<RequestResult>,
+}
+
+impl<D: Decoder> Engine<D> {
+    pub fn new(dec: D, cfg: EngineCfg) -> Self {
+        let lanes = (0..dec.lanes()).map(|_| None).collect();
+        let queue = BoundedQueue::new(cfg.max_pending);
+        Engine {
+            dec,
+            cfg,
+            queue,
+            ready: VecDeque::new(),
+            lanes,
+            arena: StateArena::default(),
+            tick: 0,
+            steps: 0,
+            active_lane_steps: 0,
+            swaps: 0,
+            swap_bytes: 0,
+            results: Vec::new(),
+        }
+    }
+
+    /// Submit one request at the current tick; `Err` = backpressure.
+    pub fn submit(&mut self, req: Request) -> Result<(), Request> {
+        debug_assert!(!req.prompt.is_empty() && req.max_new >= 1);
+        self.queue
+            .submit(Session::new(req, self.tick))
+            .map_err(|s| s.req)
+    }
+
+    /// Fill idle lanes: resume preempted sessions first (FIFO), then admit
+    /// fresh requests with a zero-copy lane reset.
+    fn admit(&mut self) -> Result<()> {
+        for lane in 0..self.lanes.len() {
+            if self.lanes[lane].is_some() {
+                continue;
+            }
+            let mut s = if let Some(mut s) = self.ready.pop_front() {
+                let st = s.state.take().expect("preempted session must carry state");
+                self.dec.load_lane(lane, &st)?;
+                self.swaps += 1;
+                self.swap_bytes += st.size_bytes() as u64;
+                self.arena.put(st);
+                s
+            } else if let Some(s) = self.queue.pop() {
+                self.dec.reset_lane(lane)?;
+                s
+            } else {
+                break;
+            };
+            if s.admit_tick.is_none() {
+                s.admit_tick = Some(self.tick);
+            }
+            s.resident_steps = 0;
+            self.lanes[lane] = Some(s);
+        }
+        Ok(())
+    }
+
+    /// Work is waiting for a lane (preemption pays off).
+    fn has_waiters(&self) -> bool {
+        !self.ready.is_empty() || !self.queue.is_empty()
+    }
+
+    fn retire(&mut self, lane: usize) {
+        let s = self.lanes[lane].take().expect("retire on empty lane");
+        if let Some(st) = s.state {
+            self.arena.put(st);
+        }
+        self.results.push(RequestResult {
+            id: s.req.id,
+            tokens: s.generated,
+            arrival_tick: s.arrival_tick,
+            admit_tick: s.admit_tick.expect("retired session was admitted"),
+            first_token_tick: s.first_token_tick.expect("retired session sampled"),
+            finish_tick: s.finish_tick.expect("retired session finished"),
+            preemptions: s.preemptions,
+        });
+    }
+
+    fn preempt(&mut self, lane: usize) -> Result<()> {
+        let mut s = self.lanes[lane].take().expect("preempt on empty lane");
+        let mut st = s.state.take().unwrap_or_else(|| self.arena.take());
+        self.dec.save_lane(lane, &mut st)?;
+        self.swaps += 1;
+        self.swap_bytes += st.size_bytes() as u64;
+        s.state = Some(st);
+        s.preemptions += 1;
+        self.ready.push_back(s);
+        self.lanes[lane] = None;
+        Ok(())
+    }
+
+    /// One engine tick over currently admitted lanes: batch step, absorb
+    /// logits, retire finished lanes, preempt expired quanta.
+    fn step_batch(&mut self) -> Result<()> {
+        let b = self.lanes.len();
+        let mut toks = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut active = 0u64;
+        for (l, slot) in self.lanes.iter().enumerate() {
+            if let Some(s) = slot {
+                toks[l] = s.next_input();
+                pos[l] = s.pos;
+                active += 1;
+            }
+        }
+        let logits = self.dec.decode_step(&Tensor::i32(&[b], toks), &pos)?;
+        let v = *logits.shape.last().unwrap();
+        let rows = logits.as_f32()?;
+        self.steps += 1;
+        self.active_lane_steps += active;
+        let tick = self.tick;
+        for lane in 0..b {
+            let Some(s) = self.lanes[lane].as_mut() else { continue };
+            let done = s.absorb(&rows[lane * v..(lane + 1) * v], tick);
+            if done {
+                self.retire(lane);
+            } else if let Some(q) = self.cfg.preempt_after {
+                if self.lanes[lane].as_ref().is_some_and(|s| s.resident_steps >= q)
+                    && self.has_waiters()
+                {
+                    self.preempt(lane)?;
+                }
+            }
+        }
+        self.tick += 1;
+        Ok(())
+    }
+
+    /// Drive a full arrival trace to completion and report.  Arrivals
+    /// that bounce off the full queue retry at the door every tick
+    /// (clients with backpressure), so every request is eventually served.
+    pub fn run_trace(&mut self, trace: &[Arrival]) -> Result<ServeReport> {
+        debug_assert!(trace.windows(2).all(|w| w[0].at_tick <= w[1].at_tick));
+        let t0 = Instant::now();
+        let mut next = 0usize;
+        let mut door: VecDeque<Request> = VecDeque::new();
+        loop {
+            anyhow::ensure!(
+                self.tick < self.cfg.max_ticks,
+                "engine exceeded max_ticks ({})",
+                self.cfg.max_ticks
+            );
+            while next < trace.len() && trace[next].at_tick <= self.tick {
+                door.push_back(trace[next].req.clone());
+                next += 1;
+            }
+            while let Some(r) = door.pop_front() {
+                if let Err(r) = self.submit(r) {
+                    door.push_front(r);
+                    break;
+                }
+            }
+            self.admit()?;
+            if self.lanes.iter().all(Option::is_none) {
+                if next >= trace.len() && door.is_empty() && !self.has_waiters() {
+                    break;
+                }
+                // idle gap in the arrival trace: fast-forward the clock
+                self.tick = self.tick.max(trace[next].at_tick);
+                continue;
+            }
+            self.step_batch()?;
+        }
+        let tokens_out: u64 = self.results.iter().map(|r| r.tokens.len() as u64).sum();
+        let mut results = std::mem::take(&mut self.results);
+        results.sort_by_key(|r| r.id);
+        Ok(ServeReport {
+            results,
+            ticks: self.tick,
+            steps: self.steps,
+            active_lane_steps: self.active_lane_steps,
+            tokens_out,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            swaps: self.swaps,
+            swap_bytes: self.swap_bytes,
+            state_reallocs: self.arena.reallocs(),
+            rejected: self.queue.rejected,
+        })
+    }
+}
+
+/// Run one request alone on lane 0 -- the single-stream semantics the
+/// batched engine must reproduce bitwise.  Lane 0 is reset first; other
+/// lanes (if any) idle on pad tokens.
+pub fn run_one<D: Decoder>(dec: &mut D, req: &Request) -> Result<Vec<i32>> {
+    anyhow::ensure!(!req.prompt.is_empty() && req.max_new >= 1, "empty request");
+    let b = dec.lanes();
+    dec.reset_lane(0)?;
+    let mut s = Session::new(req.clone(), 0);
+    loop {
+        let mut toks = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        toks[0] = s.next_input();
+        pos[0] = s.pos;
+        let logits = dec.decode_step(&Tensor::i32(&[b], toks), &pos)?;
+        let v = *logits.shape.last().unwrap();
+        if s.absorb(&logits.as_f32()?[..v], 0) {
+            return Ok(s.generated);
+        }
+    }
+}

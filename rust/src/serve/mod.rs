@@ -1,0 +1,35 @@
+//! Continuous-batching serving engine (the serving form of paper Fig. 5).
+//!
+//! Linear-MoE layers carry one constant-size recurrent state per head, so
+//! a decode lane's state can be checked in/out between steps for the cost
+//! of an O(1) memcpy -- the LSM analogue of paged KV, trivially cheap
+//! because state does not grow with position.  This module turns the
+//! `Decoder` step functions (`crate::inference`) into a serving engine:
+//!
+//!  - `queue`:   requests, bounded FIFO admission (backpressure), and a
+//!               deterministic Poisson-ish arrival-trace generator
+//!  - `session`: per-request lifecycle (prefill -> live -> finished),
+//!               sampler state, tick-based metrics, and the `StateArena`
+//!               free-list that makes steady-state admission alloc-free
+//!  - `sampler`: seeded greedy / temperature / top-k sampling
+//!  - `engine`:  the fixed-width decode batch whose lanes are backed by a
+//!               pool of sessions; admission, prefill through the same
+//!               step loop, round-robin preemption, termination, metrics
+//!  - `refmodel`: artifact-free reference backends (constant-state LSM vs
+//!               KV-staircase attention) for tests, benches, and the CLI
+//!
+//! Per-lane computation is lane-independent, so the engine is
+//! semantics-preserving: each request's token stream is bitwise identical
+//! to running it alone single-stream (`tests/serve.rs` pins this down).
+
+pub mod engine;
+pub mod queue;
+pub mod refmodel;
+pub mod sampler;
+pub mod session;
+
+pub use engine::{Engine, EngineCfg, RequestResult, ServeReport};
+pub use queue::{poisson_trace, Arrival, BoundedQueue, Request};
+pub use refmodel::{RefAttnDecoder, RefLsmDecoder};
+pub use sampler::{Sampler, Sampling};
+pub use session::{Session, StateArena};

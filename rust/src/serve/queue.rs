@@ -1,0 +1,142 @@
+//! Request queue: bounded FIFO admission with backpressure, plus a
+//! deterministic Poisson-ish arrival-trace generator for benches and the
+//! CLI (exponential inter-arrival gaps via inverse-CDF on the seeded Rng,
+//! rounded to integer engine ticks).
+
+use std::collections::VecDeque;
+
+use crate::rng::Rng;
+
+use super::sampler::Sampling;
+
+/// One decode request.  `seed` drives the request's private sampler RNG,
+/// so its token stream is independent of lane/batch scheduling.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub eos: Option<i32>,
+    pub sampling: Sampling,
+    pub seed: u64,
+}
+
+/// A request plus the engine tick it arrives at.
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    pub at_tick: u64,
+    pub req: Request,
+}
+
+/// Deterministic Poisson-ish arrival trace: n requests whose inter-arrival
+/// gaps are exponential with mean `mean_gap` ticks.  `make(id)` builds the
+/// request body.
+pub fn poisson_trace(
+    rng: &mut Rng,
+    n: usize,
+    mean_gap: f64,
+    mut make: impl FnMut(u64) -> Request,
+) -> Vec<Arrival> {
+    let mut t = 0u64;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        // u in [0, 1) so 1-u in (0, 1]: ln is finite, gap >= 0
+        let u = rng.f32() as f64;
+        t += (-mean_gap * (1.0 - u).ln()).round() as u64;
+        out.push(Arrival { at_tick: t, req: make(i as u64) });
+    }
+    out
+}
+
+/// Bounded FIFO: `submit` refuses (backpressure) once `max_pending` items
+/// are queued, and counts the bounced attempts.
+#[derive(Debug)]
+pub struct BoundedQueue<T> {
+    items: VecDeque<T>,
+    pub max_pending: usize,
+    pub submitted: u64,
+    pub rejected: u64,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(max_pending: usize) -> Self {
+        assert!(max_pending >= 1, "queue depth must be >= 1");
+        BoundedQueue {
+            items: VecDeque::new(),
+            max_pending,
+            submitted: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Enqueue, or hand the item back when full (caller retries later).
+    pub fn submit(&mut self, item: T) -> Result<(), T> {
+        if self.items.len() >= self.max_pending {
+            self.rejected += 1;
+            return Err(item);
+        }
+        self.submitted += 1;
+        self.items.push_back(item);
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.items.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request {
+            id,
+            prompt: vec![1],
+            max_new: 1,
+            eos: None,
+            sampling: Sampling::Greedy,
+            seed: id,
+        }
+    }
+
+    #[test]
+    fn fifo_order_and_backpressure() {
+        let mut q = BoundedQueue::new(2);
+        assert!(q.submit(req(0)).is_ok());
+        assert!(q.submit(req(1)).is_ok());
+        let bounced = q.submit(req(2));
+        assert!(bounced.is_err(), "third submit must bounce at depth 2");
+        assert_eq!(q.rejected, 1);
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert!(q.submit(bounced.unwrap_err()).is_ok());
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert!(q.pop().is_none());
+        assert_eq!(q.submitted, 3);
+    }
+
+    #[test]
+    fn poisson_trace_is_deterministic_and_ordered() {
+        let a = poisson_trace(&mut Rng::new(11), 64, 3.0, req);
+        let b = poisson_trace(&mut Rng::new(11), 64, 3.0, req);
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_tick, y.at_tick);
+            assert_eq!(x.req.id, y.req.id);
+        }
+        assert!(a.windows(2).all(|w| w[0].at_tick <= w[1].at_tick));
+        // mean gap in the right ballpark (exponential, n=64)
+        let total = a.last().unwrap().at_tick as f64;
+        let mean = total / 63.0;
+        assert!(mean > 0.5 && mean < 9.0, "mean inter-arrival {mean}");
+    }
+}

@@ -1,0 +1,337 @@
+//! Artifact-free reference decode backends for the serving engine.
+//!
+//! `RefLsmDecoder` is a constant-state linear recurrence (the Linear-MoE
+//! serving regime: O(1) state per lane, flat per-token cost).
+//! `RefAttnDecoder` is its attention counterpart: per-lane KV history kept
+//! in a power-of-two staircase, so state bytes and per-token cost grow
+//! with position -- the Fig. 5 contrast, in serving form.
+//!
+//! Per-lane math is strictly lane-independent and sequentially evaluated
+//! in a fixed order, so a lane's token stream is bitwise identical no
+//! matter which batch it rides in; `tests/serve.rs` pins this down by
+//! replaying every request single-stream.
+
+use anyhow::Result;
+
+use crate::inference::{Decoder, LaneState};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Constant-state reference LSM: per lane, `s = s * decay + emb[token]`,
+/// logits = s . Wout.  Position-invariant, like the real kernels.
+pub struct RefLsmDecoder {
+    lanes: usize,
+    pub vocab: usize,
+    pub d: usize,
+    emb: Vec<f32>,   // vocab * d
+    wout: Vec<f32>,  // d * vocab
+    decay: Vec<f32>, // d
+    state: Vec<f32>, // lanes * d
+}
+
+impl RefLsmDecoder {
+    pub fn new(lanes: usize, vocab: usize, d: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let emb = (0..vocab * d).map(|_| rng.normal() * 0.5).collect();
+        let wout = (0..d * vocab).map(|_| rng.normal() * 0.3).collect();
+        let decay = (0..d).map(|_| 0.5 + 0.45 * rng.f32()).collect();
+        RefLsmDecoder {
+            lanes,
+            vocab,
+            d,
+            emb,
+            wout,
+            decay,
+            state: vec![0.0; lanes * d],
+        }
+    }
+}
+
+impl Decoder for RefLsmDecoder {
+    fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn decode_step(&mut self, tokens: &Tensor, pos: &[i32]) -> Result<Tensor> {
+        let t = tokens.as_i32()?;
+        anyhow::ensure!(
+            t.len() == self.lanes && pos.len() == self.lanes,
+            "token/pos width != lanes"
+        );
+        let (d, v) = (self.d, self.vocab);
+        let mut logits = vec![0f32; self.lanes * v];
+        for l in 0..self.lanes {
+            let tok = (t[l].max(0) as usize).min(v - 1);
+            let s = &mut self.state[l * d..(l + 1) * d];
+            for j in 0..d {
+                s[j] = s[j] * self.decay[j] + self.emb[tok * d + j];
+            }
+            let row = &mut logits[l * v..(l + 1) * v];
+            for j in 0..d {
+                let sj = s[j];
+                for (x, w) in row.iter_mut().zip(&self.wout[j * v..(j + 1) * v]) {
+                    *x += sj * w;
+                }
+            }
+        }
+        Ok(Tensor::f32(&[self.lanes, v], logits))
+    }
+
+    fn save_lane(&self, lane: usize, out: &mut LaneState) -> Result<()> {
+        anyhow::ensure!(lane < self.lanes, "lane out of range");
+        let d = self.d;
+        let t = out.slot(0, &[d], true);
+        t.as_f32_mut()?
+            .copy_from_slice(&self.state[lane * d..(lane + 1) * d]);
+        out.tensors.truncate(1);
+        Ok(())
+    }
+
+    fn load_lane(&mut self, lane: usize, src: &LaneState) -> Result<()> {
+        anyhow::ensure!(lane < self.lanes, "lane out of range");
+        anyhow::ensure!(
+            src.tensors.len() == 1 && src.tensors[0].shape == [self.d],
+            "lane state does not fit RefLsmDecoder"
+        );
+        let d = self.d;
+        self.state[lane * d..(lane + 1) * d]
+            .copy_from_slice(src.tensors[0].as_f32()?);
+        Ok(())
+    }
+
+    fn reset_lane(&mut self, lane: usize) -> Result<()> {
+        anyhow::ensure!(lane < self.lanes, "lane out of range");
+        let d = self.d;
+        self.state[lane * d..(lane + 1) * d].fill(0.0);
+        Ok(())
+    }
+
+    fn lane_state_bytes(&self, _pos: usize) -> usize {
+        self.d * 4
+    }
+}
+
+struct LaneKv {
+    /// staircase-padded to `cap * d`; `len` rows are live
+    k: Vec<f32>,
+    v: Vec<f32>,
+    len: usize,
+}
+
+/// KV-staircase reference attention: each lane appends one (k, v) row per
+/// step and attends over its whole history, padded to the next power of
+/// two >= len (min `min_cap`), so swap bytes and per-token cost climb
+/// with position.
+pub struct RefAttnDecoder {
+    lanes: usize,
+    pub vocab: usize,
+    pub d: usize,
+    pub min_cap: usize,
+    emb_k: Vec<f32>, // vocab * d
+    emb_v: Vec<f32>, // vocab * d
+    emb_q: Vec<f32>, // vocab * d
+    wout: Vec<f32>,  // d * vocab
+    kv: Vec<LaneKv>,
+}
+
+fn staircase(len: usize, min_cap: usize) -> usize {
+    len.max(1).next_power_of_two().max(min_cap)
+}
+
+impl RefAttnDecoder {
+    pub fn new(lanes: usize, vocab: usize, d: usize, min_cap: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut mat = |scale: f32, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.normal() * scale).collect()
+        };
+        let emb_k = mat(0.4, vocab * d);
+        let emb_v = mat(0.4, vocab * d);
+        let emb_q = mat(0.4, vocab * d);
+        let wout = mat(0.3, d * vocab);
+        let kv = (0..lanes)
+            .map(|_| LaneKv {
+                k: vec![0.0; min_cap * d],
+                v: vec![0.0; min_cap * d],
+                len: 0,
+            })
+            .collect();
+        RefAttnDecoder { lanes, vocab, d, min_cap, emb_k, emb_v, emb_q, wout, kv }
+    }
+}
+
+impl Decoder for RefAttnDecoder {
+    fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn decode_step(&mut self, tokens: &Tensor, pos: &[i32]) -> Result<Tensor> {
+        let t = tokens.as_i32()?;
+        anyhow::ensure!(
+            t.len() == self.lanes && pos.len() == self.lanes,
+            "token/pos width != lanes"
+        );
+        let (d, v) = (self.d, self.vocab);
+        let mut logits = vec![0f32; self.lanes * v];
+        for l in 0..self.lanes {
+            let tok = (t[l].max(0) as usize).min(v - 1);
+            let lane = &mut self.kv[l];
+            // append this step's (k, v), growing the staircase if full
+            let cap = staircase(lane.len + 1, self.min_cap);
+            if cap * d > lane.k.len() {
+                lane.k.resize(cap * d, 0.0);
+                lane.v.resize(cap * d, 0.0);
+            }
+            lane.k[lane.len * d..(lane.len + 1) * d]
+                .copy_from_slice(&self.emb_k[tok * d..(tok + 1) * d]);
+            lane.v[lane.len * d..(lane.len + 1) * d]
+                .copy_from_slice(&self.emb_v[tok * d..(tok + 1) * d]);
+            lane.len += 1;
+            // softmax attention over the lane's history
+            let q = &self.emb_q[tok * d..(tok + 1) * d];
+            let scores: Vec<f32> = (0..lane.len)
+                .map(|r| {
+                    let kr = &lane.k[r * d..(r + 1) * d];
+                    q.iter().zip(kr).map(|(a, b)| a * b).sum::<f32>()
+                        / (d as f32).sqrt()
+                })
+                .collect();
+            let m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let w: Vec<f32> = scores.iter().map(|&s| (s - m).exp()).collect();
+            let z: f32 = w.iter().sum();
+            let mut ctx = vec![0f32; d];
+            for (r, wi) in w.iter().enumerate() {
+                let vr = &lane.v[r * d..(r + 1) * d];
+                for (c, x) in ctx.iter_mut().zip(vr) {
+                    *c += wi / z * x;
+                }
+            }
+            let row = &mut logits[l * v..(l + 1) * v];
+            for j in 0..d {
+                let cj = ctx[j];
+                for (x, wo) in row.iter_mut().zip(&self.wout[j * v..(j + 1) * v]) {
+                    *x += cj * wo;
+                }
+            }
+        }
+        Ok(Tensor::f32(&[self.lanes, v], logits))
+    }
+
+    fn save_lane(&self, lane: usize, out: &mut LaneState) -> Result<()> {
+        anyhow::ensure!(lane < self.lanes, "lane out of range");
+        let d = self.d;
+        let kv = &self.kv[lane];
+        let cap = kv.k.len() / d;
+        out.slot(0, &[cap, d], true)
+            .as_f32_mut()?
+            .copy_from_slice(&kv.k);
+        out.slot(1, &[cap, d], true)
+            .as_f32_mut()?
+            .copy_from_slice(&kv.v);
+        out.slot(2, &[1], false).as_i32_mut()?[0] = kv.len as i32;
+        out.tensors.truncate(3);
+        Ok(())
+    }
+
+    fn load_lane(&mut self, lane: usize, src: &LaneState) -> Result<()> {
+        anyhow::ensure!(lane < self.lanes, "lane out of range");
+        anyhow::ensure!(
+            src.tensors.len() == 3
+                && src.tensors[0].shape.len() == 2
+                && src.tensors[0].shape[1] == self.d
+                && src.tensors[0].shape == src.tensors[1].shape,
+            "lane state does not fit RefAttnDecoder"
+        );
+        let kv = &mut self.kv[lane];
+        kv.k.clear();
+        kv.k.extend_from_slice(src.tensors[0].as_f32()?);
+        kv.v.clear();
+        kv.v.extend_from_slice(src.tensors[1].as_f32()?);
+        kv.len = src.tensors[2].as_i32()?[0] as usize;
+        anyhow::ensure!(kv.len * self.d <= kv.k.len(), "saved len exceeds cap");
+        Ok(())
+    }
+
+    fn reset_lane(&mut self, lane: usize) -> Result<()> {
+        anyhow::ensure!(lane < self.lanes, "lane out of range");
+        let d = self.d;
+        let min = self.min_cap;
+        let kv = &mut self.kv[lane];
+        kv.len = 0;
+        kv.k.clear();
+        kv.k.resize(min * d, 0.0);
+        kv.v.clear();
+        kv.v.resize(min * d, 0.0);
+        Ok(())
+    }
+
+    fn lane_state_bytes(&self, pos: usize) -> usize {
+        (2 * staircase(pos, self.min_cap) * self.d + 1) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lsm_lane_independence_and_roundtrip() {
+        let mut a = RefLsmDecoder::new(2, 16, 8, 3);
+        let mut b = RefLsmDecoder::new(1, 16, 8, 3);
+        // run lane 1 of `a` and lane 0 of `b` on the same token stream,
+        // with junk on a's lane 0
+        let toks = [3i32, 7, 1, 7, 2];
+        let mut last_a = None;
+        let mut last_b = None;
+        for (p, &tk) in toks.iter().enumerate() {
+            let la = a
+                .decode_step(&Tensor::i32(&[2], vec![9, tk]), &[0, p as i32])
+                .unwrap();
+            let lb = b
+                .decode_step(&Tensor::i32(&[1], vec![tk]), &[p as i32])
+                .unwrap();
+            last_a = Some(la.as_f32().unwrap()[16..32].to_vec());
+            last_b = Some(lb.as_f32().unwrap().to_vec());
+        }
+        assert_eq!(last_a.unwrap(), last_b.unwrap(), "lane must be batch-invariant");
+        // save/load roundtrip preserves the stream bitwise
+        let mut st = LaneState::default();
+        a.save_lane(1, &mut st).unwrap();
+        a.reset_lane(1).unwrap();
+        a.load_lane(1, &st).unwrap();
+        let la = a
+            .decode_step(&Tensor::i32(&[2], vec![0, 5]), &[0, 5])
+            .unwrap();
+        let lb = b.decode_step(&Tensor::i32(&[1], vec![5]), &[5]).unwrap();
+        assert_eq!(la.as_f32().unwrap()[16..32], lb.as_f32().unwrap()[..]);
+    }
+
+    #[test]
+    fn attn_state_staircase_grows_and_roundtrips() {
+        let mut dec = RefAttnDecoder::new(1, 16, 4, 4, 5);
+        assert_eq!(dec.lane_state_bytes(1), (2 * 4 * 4 + 1) * 4);
+        assert!(dec.lane_state_bytes(1000) > dec.lane_state_bytes(10));
+        let mut rows = Vec::new();
+        for p in 0..10 {
+            let l = dec
+                .decode_step(&Tensor::i32(&[1], vec![(p % 7) as i32]), &[p])
+                .unwrap();
+            rows.push(l.as_f32().unwrap().to_vec());
+        }
+        let mut st = LaneState::default();
+        dec.save_lane(0, &mut st).unwrap();
+        // 10 tokens -> staircase cap 16
+        assert_eq!(st.tensors[0].shape, vec![16, 4]);
+        dec.reset_lane(0).unwrap();
+        dec.load_lane(0, &st).unwrap();
+        let l = dec.decode_step(&Tensor::i32(&[1], vec![3]), &[10]).unwrap();
+        // replay the same 11-token stream on a fresh decoder
+        let mut fresh = RefAttnDecoder::new(1, 16, 4, 4, 5);
+        for p in 0..10 {
+            fresh
+                .decode_step(&Tensor::i32(&[1], vec![(p % 7) as i32]), &[p])
+                .unwrap();
+        }
+        let lf = fresh.decode_step(&Tensor::i32(&[1], vec![3]), &[10]).unwrap();
+        assert_eq!(l.as_f32().unwrap(), lf.as_f32().unwrap());
+    }
+}

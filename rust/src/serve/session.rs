@@ -1,0 +1,173 @@
+//! Per-request sessions and the constant-state session pool.
+//!
+//! A `Session` owns everything one request needs to ride a decode lane:
+//! the prompt cursor, the sampled tokens, the seeded sampler, tick-based
+//! metrics, and -- while preempted out of the batch -- its saved recurrent
+//! state.  Because LSM state is O(1) per lane, checking a session in or
+//! out of a lane is a constant-size memcpy regardless of position.
+//!
+//! `StateArena` is a free-list of `LaneState` buffers: finished sessions
+//! recycle their buffers, so steady-state admission and preemption
+//! allocate nothing when shapes repeat (zero-copy where shapes allow).
+
+use crate::inference::LaneState;
+
+use super::queue::Request;
+use super::sampler::Sampler;
+
+pub struct Session {
+    pub req: Request,
+    pub sampler: Sampler,
+    /// next input position: prompt tokens consumed + generated fed back
+    pub pos: i32,
+    pub generated: Vec<i32>,
+    /// saved recurrent state while not resident in a lane
+    pub state: Option<LaneState>,
+    pub arrival_tick: u64,
+    pub admit_tick: Option<u64>,
+    pub first_token_tick: Option<u64>,
+    pub finish_tick: Option<u64>,
+    pub preemptions: u32,
+    /// decode steps since the session last entered a lane (preempt quantum)
+    pub resident_steps: u64,
+}
+
+impl Session {
+    pub fn new(req: Request, arrival_tick: u64) -> Self {
+        let sampler = Sampler::new(req.sampling, req.seed);
+        Session {
+            req,
+            sampler,
+            pos: 0,
+            generated: Vec::new(),
+            state: None,
+            arrival_tick,
+            admit_tick: None,
+            first_token_tick: None,
+            finish_tick: None,
+            preemptions: 0,
+            resident_steps: 0,
+        }
+    }
+
+    /// Token to feed at the current position: the prompt during prefill,
+    /// afterwards the last sampled token.
+    pub fn next_input(&self) -> i32 {
+        let p = self.pos as usize;
+        if p < self.req.prompt.len() {
+            self.req.prompt[p]
+        } else {
+            *self
+                .generated
+                .last()
+                .expect("live session past prefill must have sampled")
+        }
+    }
+
+    /// Still running prompt tokens through the step loop (the logits of
+    /// the step about to run will be discarded)?
+    pub fn in_prefill(&self) -> bool {
+        (self.pos as usize) + 1 < self.req.prompt.len()
+    }
+
+    /// Consume the logits row produced by feeding position `pos`: advance
+    /// the cursor, sample once past prefill, and report termination
+    /// (max-token budget exhausted or EOS sampled).
+    pub fn absorb(&mut self, logits_row: &[f32], tick: u64) -> bool {
+        let sample_now = (self.pos as usize) + 1 >= self.req.prompt.len();
+        self.pos += 1;
+        self.resident_steps += 1;
+        if !sample_now {
+            return false;
+        }
+        let tok = self.sampler.next(logits_row) as i32;
+        if self.first_token_tick.is_none() {
+            self.first_token_tick = Some(tick);
+        }
+        self.generated.push(tok);
+        let done =
+            self.generated.len() >= self.req.max_new || self.req.eos == Some(tok);
+        if done {
+            self.finish_tick = Some(tick);
+        }
+        done
+    }
+}
+
+/// Free-list of `LaneState` buffers (the session pool's allocator).
+#[derive(Debug, Default)]
+pub struct StateArena {
+    free: Vec<LaneState>,
+    pub takes: u64,
+    /// takes that found no recycled buffer (cold starts)
+    pub misses: u64,
+}
+
+impl StateArena {
+    pub fn take(&mut self) -> LaneState {
+        self.takes += 1;
+        self.free.pop().unwrap_or_else(|| {
+            self.misses += 1;
+            LaneState::default()
+        })
+    }
+
+    pub fn put(&mut self, s: LaneState) {
+        self.free.push(s);
+    }
+
+    /// Total buffer (re)allocations across every state the arena has seen
+    /// and still holds -- flat in steady state when shapes repeat.
+    pub fn reallocs(&self) -> u64 {
+        self.free.iter().map(|s| s.reallocs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::sampler::Sampling;
+
+    fn req(prompt: Vec<i32>, max_new: usize, eos: Option<i32>) -> Request {
+        Request { id: 0, prompt, max_new, eos, sampling: Sampling::Greedy, seed: 1 }
+    }
+
+    #[test]
+    fn prefill_then_decode_then_budget_stop() {
+        // prompt [5, 6]; greedy over a 3-token vocab
+        let mut s = Session::new(req(vec![5, 6], 2, None), 0);
+        assert_eq!(s.next_input(), 5);
+        assert!(s.in_prefill());
+        assert!(!s.absorb(&[0., 0., 1.], 10)); // prefill step: no sample
+        assert_eq!(s.next_input(), 6);
+        assert!(!s.in_prefill());
+        assert!(!s.absorb(&[0., 0., 1.], 11)); // last prompt token: samples 2
+        assert_eq!(s.generated, vec![2]);
+        assert_eq!(s.first_token_tick, Some(11));
+        assert_eq!(s.next_input(), 2);
+        assert!(s.absorb(&[1., 0., 0.], 12)); // budget of 2 reached
+        assert_eq!(s.generated, vec![2, 0]);
+        assert_eq!(s.finish_tick, Some(12));
+    }
+
+    #[test]
+    fn eos_terminates_early() {
+        let mut s = Session::new(req(vec![1], 100, Some(2)), 0);
+        assert!(s.absorb(&[0., 0., 1.], 5), "sampling EOS must finish");
+        assert_eq!(s.generated, vec![2]);
+    }
+
+    #[test]
+    fn arena_recycles_buffers() {
+        let mut a = StateArena::default();
+        let mut s1 = a.take();
+        s1.slot(0, &[4], true);
+        assert_eq!((a.takes, a.misses), (1, 1));
+        a.put(s1);
+        let s2 = a.take();
+        assert_eq!((a.takes, a.misses), (2, 1), "second take must reuse");
+        assert_eq!(s2.tensors.len(), 1);
+        a.put(s2);
+        assert_eq!(a.reallocs(), 1);
+    }
+}

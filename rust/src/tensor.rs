@@ -75,6 +75,21 @@ impl Tensor {
         }
     }
 
+    pub fn as_i32_mut(&mut self) -> Result<&mut [i32]> {
+        match &mut self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// Zero the buffer in place (keeps shape, dtype, and allocation).
+    pub fn fill_zero(&mut self) {
+        match &mut self.data {
+            Data::F32(v) => v.fill(0.0),
+            Data::I32(v) => v.fill(0),
+        }
+    }
+
     /// First element as f32 (for scalar results like losses).
     pub fn item_f32(&self) -> Result<f32> {
         self.as_f32()?.first().copied()
