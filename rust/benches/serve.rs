@@ -12,6 +12,14 @@
 //! BENCH_serve.json (override the path with BENCH_JSON_OUT) and
 //! schema-checks it by re-reading.  SERVE_SMOKE=1 shrinks everything for
 //! a CI smoke run.
+//!
+//! Part 3 -- fault-rate sweep: the LSM engine under seeded step-error
+//! storms at 0%, 1%, and 5% per decode attempt, measuring what fault
+//! supervision costs: goodput (finished-request tokens/sec), replays, and
+//! how many requests survive vs fail.  Same trace at every rate (fault
+//! coordinates are rate-invariant), so rows are directly comparable.
+
+use std::sync::Arc;
 
 use linear_moe::bench_util::bench;
 use linear_moe::coordinator::metrics::{Summary, Table};
@@ -19,8 +27,8 @@ use linear_moe::inference::{Decoder, LaneState};
 use linear_moe::json;
 use linear_moe::rng::Rng;
 use linear_moe::serve::{
-    poisson_trace, Engine, EngineCfg, RefAttnDecoder, RefLsmDecoder, Request,
-    Sampling, ServeReport,
+    poisson_trace, Engine, EngineCfg, FaultDecoder, RefAttnDecoder, RefLsmDecoder,
+    Request, Sampling, ServeFaultPlan, ServeReport,
 };
 use linear_moe::tensor::Tensor;
 
@@ -80,15 +88,27 @@ fn serve_requests(n: usize) -> Vec<Request> {
             eos: None,
             sampling: Sampling::Greedy,
             seed: id,
+            ttl: None,
         })
         .collect()
 }
 
 fn run_engine<D: Decoder>(dec: D, reqs: &[Request]) -> anyhow::Result<ServeReport> {
+    run_engine_cfg(
+        dec,
+        reqs,
+        EngineCfg { preempt_after: Some(4), ..Default::default() },
+    )
+}
+
+fn run_engine_cfg<D: Decoder>(
+    dec: D,
+    reqs: &[Request],
+    cfg: EngineCfg,
+) -> anyhow::Result<ServeReport> {
     let mut rng = Rng::new(SEED);
     let trace = poisson_trace(&mut rng, reqs.len(), 2.0, |id| reqs[id as usize].clone());
-    let cfg = EngineCfg { preempt_after: Some(4), ..Default::default() };
-    Engine::new(dec, cfg).run_trace(&trace)
+    Engine::new(dec, cfg)?.run_trace(&trace)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -161,9 +181,17 @@ fn main() -> anyhow::Result<()> {
     ];
     for (name, rep) in &runs {
         assert_eq!(rep.results.len(), n, "{name}: all requests must finish");
-        let waits: Vec<f64> =
-            rep.results.iter().map(|r| r.queue_wait() as f64).collect();
-        let ttfts: Vec<f64> = rep.results.iter().map(|r| r.ttft() as f64).collect();
+        assert!(rep.outcomes.all_finished(), "{name}: clean run, no faults");
+        let waits: Vec<f64> = rep
+            .results
+            .iter()
+            .filter_map(|r| r.queue_wait().map(|w| w as f64))
+            .collect();
+        let ttfts: Vec<f64> = rep
+            .results
+            .iter()
+            .filter_map(|r| r.ttft().map(|t| t as f64))
+            .collect();
         let (w, t) = (Summary::of(&waits), Summary::of(&ttfts));
         table.row(&[
             name.to_string(),
@@ -206,6 +234,60 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- Part 3: fault-rate sweep on the LSM engine --------------------
+    // same trace at every rate; seeded step errors are rate-invariant in
+    // their coordinates, so the 1% storm is a subset of the 5% one
+    let rates = [0.0, 0.01, 0.05];
+    let horizon = 2000; // covers every decode attempt either trace makes
+    let mut sweep_rows = Vec::new();
+    let mut table = Table::new(&[
+        "fault rate", "injected", "finished", "failed", "recovered", "retries",
+        "goodput tok/s",
+    ]);
+    for &rate in &rates {
+        let plan =
+            Arc::new(ServeFaultPlan::seeded_step_errors(SEED ^ 0xFA017, horizon, 4, rate));
+        let cfg = EngineCfg {
+            preempt_after: Some(4),
+            fault: plan.clone(),
+            ..Default::default()
+        };
+        let dec = FaultDecoder::new(RefLsmDecoder::new(4, VOCAB, d, SEED), plan);
+        let rep = run_engine_cfg(dec, &reqs, cfg)?;
+        let o = rep.outcomes;
+        let retries: u64 = rep.results.iter().map(|r| r.retries as u64).sum();
+        assert_eq!(o.total(), n as u64, "rate {rate}: every request accounted for");
+        if rate == 0.0 {
+            assert_eq!(rep.faults_injected, 0, "empty plan injects nothing");
+            assert!(o.all_finished(), "clean sweep baseline");
+        } else if rate >= 0.05 {
+            assert!(rep.faults_injected > 0, "5% storm must fire on this trace");
+        }
+        table.row(&[
+            format!("{:.0}%", rate * 100.0),
+            rep.faults_injected.to_string(),
+            o.finished.to_string(),
+            o.failed.to_string(),
+            o.recovered.to_string(),
+            retries.to_string(),
+            format!("{:.0}", rep.tokens_per_sec()),
+        ]);
+        sweep_rows.push(format!(
+            "    {{\"rate\": {rate}, \"faults_injected\": {}, \"finished\": {}, \
+             \"failed\": {}, \"recovered\": {}, \"retries\": {retries}, \
+             \"steps\": {}, \"tokens_out\": {}, \"goodput_tok_s\": {:.2}}}",
+            rep.faults_injected,
+            o.finished,
+            o.failed,
+            o.recovered,
+            rep.steps,
+            rep.tokens_out,
+            rep.tokens_per_sec(),
+        ));
+    }
+    println!("\n=== Fault-rate sweep, LSM engine, {n} requests, 4 lanes ===");
+    table.print();
+
     // --- Emit + schema-check BENCH_serve.json --------------------------
     let out = std::env::var("BENCH_JSON_OUT")
         .unwrap_or_else(|_| "../BENCH_serve.json".to_string());
@@ -222,9 +304,10 @@ fn main() -> anyhow::Result<()> {
     let json_text = format!(
         "{{\n  \"bench\": \"serve\",\n  \"smoke\": {smoke},\n  \
          \"iters\": {iters},\n  \"d\": {d},\n  \"swap_cost\": [\n{}\n  ],\n  \
-         \"engine\": [\n{}\n  ]\n}}\n",
+         \"engine\": [\n{}\n  ],\n  \"fault_sweep\": [\n{}\n  ]\n}}\n",
         swap_json.join(",\n"),
-        engine_rows.join(",\n")
+        engine_rows.join(",\n"),
+        sweep_rows.join(",\n")
     );
     std::fs::write(&out, &json_text)?;
     println!("wrote {out}");
@@ -248,6 +331,17 @@ fn main() -> anyhow::Result<()> {
         assert!(row.get("tokens_per_sec").and_then(|v| v.as_f64()).is_some());
         assert!(row.get("occupancy").and_then(|v| v.as_f64()).is_some());
         assert!(row.get("ttft_p95_ticks").and_then(|v| v.as_f64()).is_some());
+    }
+    let sweep = parsed.get("fault_sweep").and_then(|v| v.as_arr()).expect("fault_sweep");
+    assert_eq!(sweep.len(), rates.len());
+    for row in sweep {
+        assert!(row.get("rate").and_then(|v| v.as_f64()).is_some());
+        row.usize_field("faults_injected")?;
+        row.usize_field("finished")?;
+        row.usize_field("failed")?;
+        row.usize_field("recovered")?;
+        row.usize_field("retries")?;
+        assert!(row.get("goodput_tok_s").and_then(|v| v.as_f64()).is_some());
     }
     println!("schema check passed");
     Ok(())

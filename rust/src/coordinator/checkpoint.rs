@@ -47,16 +47,45 @@ const MAX_NDIM: usize = 16;
 // checkpoints here are small enough that throughput is irrelevant.
 // ---------------------------------------------------------------------------
 
-pub fn crc32(data: &[u8]) -> u32 {
-    let mut crc = 0xFFFF_FFFFu32;
-    for &b in data {
-        crc ^= b as u32;
-        for _ in 0..8 {
-            let mask = (crc & 1).wrapping_neg();
-            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+/// Streaming CRC-32 hasher: feed byte chunks with [`Crc32::update`], read
+/// the digest with [`Crc32::finish`].  Used by the checkpoint trailer and
+/// by the serving engine to checksum lane-state images without staging
+/// them into a contiguous buffer first.
+#[derive(Clone, Debug)]
+pub struct Crc32 {
+    crc: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Crc32 { crc: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        for &b in data {
+            self.crc ^= b as u32;
+            for _ in 0..8 {
+                let mask = (self.crc & 1).wrapping_neg();
+                self.crc = (self.crc >> 1) ^ (0xEDB8_8320 & mask);
+            }
         }
     }
-    !crc
+
+    pub fn finish(&self) -> u32 {
+        !self.crc
+    }
+}
+
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut h = Crc32::new();
+    h.update(data);
+    h.finish()
 }
 
 /// `<path>.prev`: where [`save_rotating`] parks the previous good file.
@@ -351,6 +380,19 @@ mod tests {
         assert_eq!(loaded[0].0, "params");
         assert_eq!(loaded[0].1.tensors, params.tensors);
         assert_eq!(loaded[1].1.tensors, opt.tensors);
+    }
+
+    #[test]
+    fn streaming_crc_matches_one_shot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let mut h = Crc32::new();
+        for chunk in data.chunks(7) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finish(), crc32(&data));
+        assert_eq!(Crc32::new().finish(), crc32(&[]));
+        // IEEE CRC-32 check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
     }
 
     #[test]

@@ -68,6 +68,33 @@ pub struct HealthSnapshot {
     pub traffic: CommTraffic,
 }
 
+/// Per-outcome request counts for a serving run: how many requests
+/// finished, expired past their deadline, were shed at admission, or
+/// failed after exhausting their retry budget.  `recovered` counts the
+/// subset of `finished` that needed at least one fault-recovery replay.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeOutcomes {
+    pub finished: u64,
+    pub expired: u64,
+    pub shed: u64,
+    pub failed: u64,
+    /// finished after >= 1 re-prefill replay (subset of `finished`)
+    pub recovered: u64,
+}
+
+impl ServeOutcomes {
+    /// Requests accounted for (every submitted request lands in exactly
+    /// one bucket; `recovered` overlaps `finished` and is not added).
+    pub fn total(&self) -> u64 {
+        self.finished + self.expired + self.shed + self.failed
+    }
+
+    /// A fully clean run: nothing expired, shed, or failed.
+    pub fn all_finished(&self) -> bool {
+        self.expired == 0 && self.shed == 0 && self.failed == 0
+    }
+}
+
 /// Order statistics over a set of per-request serving measurements
 /// (queue wait, TTFT, tokens) -- what the serve CLI and bench report.
 #[derive(Clone, Debug, Default)]
@@ -258,6 +285,16 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serve_outcomes_buckets() {
+        let o = ServeOutcomes { finished: 5, expired: 2, shed: 1, failed: 1, recovered: 3 };
+        assert_eq!(o.total(), 9, "recovered overlaps finished, not added");
+        assert!(!o.all_finished());
+        let clean = ServeOutcomes { finished: 4, recovered: 1, ..Default::default() };
+        assert!(clean.all_finished());
+        assert_eq!(ServeOutcomes::default().total(), 0);
+    }
 
     #[test]
     fn summary_order_stats() {

@@ -29,6 +29,72 @@ use std::sync::atomic::{AtomicBool, Ordering};
 
 use anyhow::{bail, Context, Result};
 
+// ---------------------------------------------------------------------------
+// Shared CLI fault grammar: `kind:key=val,key=val;kind:...`.  The training
+// plan (`FaultPlan::parse`) and the serving plan
+// (`crate::serve::fault::ServeFaultPlan::parse`) both build on this, so the
+// two `--fault` flags read identically.
+// ---------------------------------------------------------------------------
+
+/// One parsed `kind:key=val,...` clause of a fault spec.
+#[derive(Clone, Debug)]
+pub struct Clause {
+    pub kind: String,
+    keys: Vec<(String, u64)>,
+    /// the raw clause text, kept for error messages
+    text: String,
+}
+
+impl Clause {
+    pub fn get(&self, key: &str) -> Option<u64> {
+        self.keys.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+
+    /// Required integer argument.
+    pub fn need(&self, key: &str) -> Result<u64> {
+        self.get(key)
+            .with_context(|| format!("fault clause {:?}: missing {key}", self.text))
+    }
+
+    /// Reject keys outside `allowed` (catches typos like `rnak=`).
+    pub fn allow(&self, allowed: &[&str]) -> Result<()> {
+        for (k, _) in &self.keys {
+            if !allowed.contains(&k.as_str()) {
+                bail!("fault clause {:?}: unknown key {k:?}", self.text);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Split a `;`-separated fault spec into typed clauses.  Empty clauses are
+/// skipped; every value must be a non-negative integer.
+pub fn parse_clauses(spec: &str) -> Result<Vec<Clause>> {
+    let mut out = Vec::new();
+    for clause in spec.split(';').filter(|c| !c.trim().is_empty()) {
+        let (kind, rest) = clause
+            .split_once(':')
+            .with_context(|| format!("fault clause {clause:?}: missing ':'"))?;
+        let mut keys = Vec::new();
+        for kv in rest.split(',').filter(|c| !c.trim().is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("fault clause {clause:?}: bad key=value {kv:?}"))?;
+            let v: u64 = v
+                .trim()
+                .parse()
+                .with_context(|| format!("fault clause {clause:?}: non-integer {kv:?}"))?;
+            keys.push((k.trim().to_string(), v));
+        }
+        out.push(Clause {
+            kind: kind.trim().to_string(),
+            keys,
+            text: clause.to_string(),
+        });
+    }
+    Ok(out)
+}
+
 /// One injectable fault, addressed by rank and training step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Fault {
@@ -86,46 +152,34 @@ impl FaultPlan {
     /// `drop_ring:rank=R,step=S` | `corrupt_ckpt:offset=B`.
     pub fn parse(spec: &str) -> Result<Self> {
         let mut faults = Vec::new();
-        for clause in spec.split(';').filter(|c| !c.trim().is_empty()) {
-            let (kind, rest) = clause
-                .split_once(':')
-                .with_context(|| format!("fault clause {clause:?}: missing ':'"))?;
-            let mut rank = None;
-            let mut step = None;
-            let mut ms = None;
-            let mut offset = None;
-            for kv in rest.split(',').filter(|c| !c.trim().is_empty()) {
-                let (k, v) = kv
-                    .split_once('=')
-                    .with_context(|| format!("fault clause {clause:?}: bad key=value {kv:?}"))?;
-                let v: u64 = v
-                    .trim()
-                    .parse()
-                    .with_context(|| format!("fault clause {clause:?}: non-integer {kv:?}"))?;
-                match k.trim() {
-                    "rank" => rank = Some(v as usize),
-                    "step" => step = Some(v as usize),
-                    "ms" => ms = Some(v),
-                    "offset" => offset = Some(v as usize),
-                    other => bail!("fault clause {clause:?}: unknown key {other:?}"),
+        for c in parse_clauses(spec)? {
+            let fault = match c.kind.as_str() {
+                "kill" => {
+                    c.allow(&["rank", "step"])?;
+                    Fault::KillRank {
+                        rank: c.need("rank")? as usize,
+                        step: c.need("step")? as usize,
+                    }
                 }
-            }
-            let need = |o: Option<usize>, k: &str| {
-                o.with_context(|| format!("fault clause {clause:?}: missing {k}"))
-            };
-            let fault = match kind.trim() {
-                "kill" => Fault::KillRank { rank: need(rank, "rank")?, step: need(step, "step")? },
-                "delay" => Fault::DelayCollective {
-                    rank: need(rank, "rank")?,
-                    step: need(step, "step")?,
-                    ms: ms.with_context(|| format!("fault clause {clause:?}: missing ms"))?,
-                },
+                "delay" => {
+                    c.allow(&["rank", "step", "ms"])?;
+                    Fault::DelayCollective {
+                        rank: c.need("rank")? as usize,
+                        step: c.need("step")? as usize,
+                        ms: c.need("ms")?,
+                    }
+                }
                 "drop_ring" => {
-                    Fault::DropRing { rank: need(rank, "rank")?, step: need(step, "step")? }
+                    c.allow(&["rank", "step"])?;
+                    Fault::DropRing {
+                        rank: c.need("rank")? as usize,
+                        step: c.need("step")? as usize,
+                    }
                 }
-                "corrupt_ckpt" => Fault::CorruptCheckpoint {
-                    offset: need(offset, "offset")?,
-                },
+                "corrupt_ckpt" => {
+                    c.allow(&["offset"])?;
+                    Fault::CorruptCheckpoint { offset: c.need("offset")? as usize }
+                }
                 other => bail!("unknown fault kind {other:?}"),
             };
             faults.push(fault);
@@ -211,6 +265,20 @@ mod tests {
         assert!(FaultPlan::parse("explode:rank=1,step=2").is_err());
         assert!(FaultPlan::parse("kill:rank=x,step=2").is_err());
         assert!(FaultPlan::parse("delay:rank=0,step=1").is_err()); // missing ms
+    }
+
+    #[test]
+    fn shared_clause_grammar() {
+        let cs = parse_clauses("kill:rank=1,step=5; delay:rank=0,step=3,ms=50").unwrap();
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0].kind, "kill");
+        assert_eq!(cs[0].get("rank"), Some(1));
+        assert_eq!(cs[0].get("nope"), None);
+        assert!(cs[0].need("nope").is_err());
+        assert!(cs[0].allow(&["rank", "step"]).is_ok());
+        assert!(cs[0].allow(&["rank"]).is_err());
+        // typo'd keys are rejected by the consumers
+        assert!(FaultPlan::parse("kill:rnak=1,step=2").is_err());
     }
 
     #[test]

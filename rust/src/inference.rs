@@ -290,6 +290,16 @@ pub trait Decoder {
     /// Modeled bytes of one lane's recurrent state when that lane is at
     /// position `pos` (constant for LSM; staircase for attention KV).
     fn lane_state_bytes(&self, pos: usize) -> usize;
+
+    /// True when every live lane must sit at the same position each step
+    /// (the scalar-pos PJRT attention artifacts).  Ragged serving --
+    /// staggered admission, preemption, mixed request lengths -- is
+    /// impossible on such a backend with more than one lane, so the
+    /// engine rejects the combination at construction with a typed
+    /// `EngineError::AlignedLanesOnly` instead of failing mid-trace.
+    fn aligned_lanes_only(&self) -> bool {
+        false
+    }
 }
 
 /// Pure-LSM decoder: one artifact, constant state.
@@ -478,6 +488,12 @@ impl Decoder for AttnDecoder {
             .unwrap_or(self.exes.len() - 1);
         let bytes: usize = self.state_specs(idx).iter().map(|s| s.numel() * 4).sum();
         bytes / self.batch
+    }
+
+    /// The staircase artifacts write KV row `pos` for the whole batch
+    /// (ROADMAP "Known gap"), so ragged serving is impossible here.
+    fn aligned_lanes_only(&self) -> bool {
+        true
     }
 }
 

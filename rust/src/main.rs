@@ -27,7 +27,8 @@ use linear_moe::inference::{greedy, Decoder, LsmDecoder};
 use linear_moe::memcost;
 use linear_moe::runtime::Runtime;
 use linear_moe::serve::{
-    poisson_trace, Engine, EngineCfg, RefLsmDecoder, Request, Sampling,
+    poisson_trace, Engine, EngineCfg, FaultDecoder, RefLsmDecoder, Request,
+    Sampling, ServeFaultPlan,
 };
 use linear_moe::tensor::Tensor;
 
@@ -83,6 +84,9 @@ fn main() -> Result<()> {
                  [--prompt-len 8] [--arrival-gap 2.0]\n\
                  \x20       [--temp T] [--top-k K] [--preempt-after Q] \
                  [--max-pending N] [--seed S] [--backend auto|ref|pjrt]\n\
+                 \x20       [--deadline TTL] [--retries N] \
+                 [--fault 'step_err:step=30,lane=1;corrupt_state:req=3;\
+                 stall:step=50,ticks=20']\n\
                  eval:   --tag tiny_gla --batch 2 --seq 128 [--batches 8]\n\
                  show-config: [--tag tiny_gla] -- print variants + memory model"
             );
@@ -320,7 +324,9 @@ fn infer(dir: &str, f: &HashMap<String, String>) -> Result<()> {
 /// Continuous-batching serving demo: a Poisson-ish arrival trace of
 /// synthetic requests through the session-pool engine.  Uses the PJRT
 /// LSM decoder when artifacts are available (or --backend pjrt), else
-/// falls back to the artifact-free reference LSM backend.
+/// degrades to the artifact-free reference LSM backend (recorded in the
+/// report).  `--fault` injects deterministic serving faults, `--deadline`
+/// gives every request a TTL in ticks, `--retries` bounds fault replays.
 fn serve_cmd(dir: &str, f: &HashMap<String, String>) -> Result<()> {
     let tag: String = flag(f, "tag", "tiny_bla".to_string());
     let requests: usize = flag(f, "requests", 32);
@@ -334,6 +340,14 @@ fn serve_cmd(dir: &str, f: &HashMap<String, String>) -> Result<()> {
     let max_pending: usize = flag(f, "max-pending", 1024);
     let seed: u64 = flag(f, "seed", 7);
     let backend: String = flag(f, "backend", "auto".to_string());
+    let ttl: u64 = flag(f, "deadline", 0);
+    let max_retries: u32 = flag(f, "retries", 2);
+    let plan = match f.get("fault") {
+        Some(spec) => std::sync::Arc::new(
+            ServeFaultPlan::parse(spec).context("parsing --fault")?,
+        ),
+        None => std::sync::Arc::new(ServeFaultPlan::none()),
+    };
     anyhow::ensure!(batch >= 1 && requests >= 1 && prompt_len >= 1 && max_new >= 1);
     let sampling = if top_k > 0 {
         Sampling::TopK { k: top_k, temp: temp.max(1e-3) }
@@ -345,8 +359,11 @@ fn serve_cmd(dir: &str, f: &HashMap<String, String>) -> Result<()> {
     let cfg = EngineCfg {
         max_pending,
         preempt_after: (quantum > 0).then_some(quantum),
+        max_retries,
+        fault: plan.clone(),
         ..Default::default()
     };
+    let ttl = (ttl > 0).then_some(ttl);
 
     let pjrt = match backend.as_str() {
         "ref" => None,
@@ -367,16 +384,26 @@ fn serve_cmd(dir: &str, f: &HashMap<String, String>) -> Result<()> {
         Some((dec, rt)) => {
             let vocab = rt.manifest.variant(&tag)?.config.vocab;
             println!("serve: PJRT LSM decoder, tag {tag}, {batch} lanes");
-            drive_serve(dec, vocab, requests, prompt_len, max_new, gap, sampling, seed, cfg)
+            let dec = FaultDecoder::new(dec, plan);
+            drive_serve(
+                dec, vocab, requests, prompt_len, max_new, gap, sampling, seed, ttl,
+                cfg, false,
+            )
         }
         None if backend == "pjrt" => anyhow::bail!("--backend pjrt needs artifacts"),
         None => {
+            // degraded only when PJRT was attempted and lost (auto mode);
+            // --backend ref is an explicit choice, not a degradation
+            let degraded = backend != "ref";
             println!(
-                "serve: reference LSM backend ({batch} lanes; no artifacts \
-                 or --backend ref)"
+                "serve: reference LSM backend ({batch} lanes; {})",
+                if degraded { "degraded from pjrt: no artifacts" } else { "--backend ref" }
             );
-            let dec = RefLsmDecoder::new(batch, 64, 16, seed);
-            drive_serve(dec, 64, requests, prompt_len, max_new, gap, sampling, seed, cfg)
+            let dec = FaultDecoder::new(RefLsmDecoder::new(batch, 64, 16, seed), plan);
+            drive_serve(
+                dec, 64, requests, prompt_len, max_new, gap, sampling, seed, ttl, cfg,
+                degraded,
+            )
         }
     }
 }
@@ -391,7 +418,9 @@ fn drive_serve<D: Decoder>(
     gap: f64,
     sampling: Sampling,
     seed: u64,
+    ttl: Option<u64>,
     cfg: EngineCfg,
+    degraded: bool,
 ) -> Result<()> {
     let mut rng = Rng::new(seed);
     let mut prompt_rng = Rng::new(seed ^ 0xABCD);
@@ -404,21 +433,68 @@ fn drive_serve<D: Decoder>(
         eos: None,
         sampling,
         seed: seed.wrapping_add(id),
+        ttl,
     });
-    let mut engine = Engine::new(dec, cfg);
-    let report = engine.run_trace(&trace)?;
-    let waits: Vec<f64> = report.results.iter().map(|r| r.queue_wait() as f64).collect();
-    let ttfts: Vec<f64> = report.results.iter().map(|r| r.ttft() as f64).collect();
+    let mut engine = Engine::new(dec, cfg)?;
+    let mut report = engine.run_trace(&trace)?;
+    report.degraded = degraded;
+    let waits: Vec<f64> = report
+        .results
+        .iter()
+        .filter_map(|r| r.queue_wait().map(|w| w as f64))
+        .collect();
+    let ttfts: Vec<f64> = report
+        .results
+        .iter()
+        .filter_map(|r| r.ttft().map(|t| t as f64))
+        .collect();
     let wait = metrics::Summary::of(&waits);
     let ttft = metrics::Summary::of(&ttfts);
+    let o = &report.outcomes;
     println!(
-        "served {} requests, {} tokens in {:.3}s ({:.0} tok/s; {} decoder steps)",
+        "served {} requests, {} tokens in {:.3}s ({:.0} tok/s goodput; {} decoder steps)",
         report.results.len(),
         report.tokens_out,
         report.wall_secs,
         report.tokens_per_sec(),
         report.steps
     );
+    println!(
+        "outcomes: finished {} (recovered {})  expired {}  shed {}  failed {}{}",
+        o.finished,
+        o.recovered,
+        o.expired,
+        o.shed,
+        o.failed,
+        if report.degraded { "  [degraded backend]" } else { "" }
+    );
+    if report.faults_injected + report.stalled_ticks + report.corruptions_injected > 0 {
+        println!(
+            "faults: step errors {}  stalled ticks {}  state corruptions {}  \
+             crc failures {}  retries {}",
+            report.faults_injected,
+            report.stalled_ticks,
+            report.corruptions_injected,
+            report.crc_failures,
+            report.results.iter().map(|r| r.retries as u64).sum::<u64>()
+        );
+    }
+    if ttl.is_some() {
+        let misses: Vec<f64> = report
+            .results
+            .iter()
+            .filter_map(|r| r.deadline_miss().map(|m| m as f64))
+            .collect();
+        let m = metrics::Summary::of(&misses);
+        println!(
+            "deadline misses: {} of {} (ticks late: mean {:.1} p95 {:.0} max {:.0})",
+            m.n,
+            report.results.len(),
+            m.mean,
+            m.p95,
+            m.max
+        );
+    }
     println!(
         "occupancy {:.2}/{} lanes  swaps {} ({} KiB)  state reallocs {}  \
          bounced submits {}",

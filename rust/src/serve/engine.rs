@@ -1,28 +1,108 @@
-//! Continuous-batching decode engine.
+//! Continuous-batching decode engine with fault supervision.
 //!
 //! A fixed-width batch of decode lanes is backed by a pool of per-request
 //! sessions.  Each tick the engine ingests arrivals into the bounded
-//! queue (backpressure), admits sessions into idle lanes (preempted
-//! sessions resume first, FIFO), runs one `Decoder` step for the whole
-//! batch, and retires or preempts lanes.  Prefill runs prompt tokens
-//! through the same step loop before a lane goes live; admission of a
-//! fresh request is a zero-copy lane reset, and state swaps go through
-//! the `StateArena` free-list so steady state allocates nothing.
+//! queue (backpressure), expires requests past their deadline, admits
+//! sessions into idle lanes (preempted sessions resume first, FIFO), runs
+//! one `Decoder` step for the whole batch, and retires or preempts lanes.
+//! Prefill runs prompt tokens through the same step loop before a lane
+//! goes live; admission of a fresh request is a zero-copy lane reset, and
+//! state swaps go through the `StateArena` free-list so steady state
+//! allocates nothing.
 //!
 //! Because per-lane computation is lane-independent (the `Decoder`
 //! contract), every request's token stream is bitwise identical to
 //! running it alone single-stream (`run_one`), whatever the interleaving.
+//! The fault machinery preserves that guarantee:
+//!
+//!  - a failed `decode_step` ([`ServeFaultError::Step`]) happens *before*
+//!    any lane advances, so non-victim lanes replay the identical step
+//!    next tick; the victim is rewound to its prompt and re-prefilled
+//!    (bounded by `max_retries`, then retired `Failed`),
+//!  - every preempted lane-state image is CRC-stamped at check-out and
+//!    verified at check-in; a corrupted image is never loaded -- the
+//!    session replays from its prompt instead of decoding from garbage,
+//!  - a stalled backend ([`ServeFaultError::Stall`]) burns engine ticks
+//!    without advancing anyone, so deadlines keep running,
+//!  - per-request deadlines (`Request::ttl`) expire queued, ready, and
+//!    running sessions, and admission sheds requests that provably cannot
+//!    finish in time instead of wasting lane steps on them.
+//!
+//! Replayed sessions regenerate the same stream (seeded samplers), so a
+//! `Finished` result -- recovered or not -- is always bitwise equal to
+//! `run_one`, and a partial result (`Failed`/`Expired`) is always a
+//! prefix of it, never wrong tokens.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::coordinator::metrics::ServeOutcomes;
 use crate::inference::Decoder;
 use crate::tensor::Tensor;
 
+use super::fault::{corrupt_lane_state, lane_state_crc, ServeFault, ServeFaultError,
+                   ServeFaultPlan};
 use super::queue::{Arrival, BoundedQueue, Request};
 use super::session::{Session, StateArena};
+
+/// Typed engine failures.  Invariant violations that used to abort the
+/// process now surface through `run_trace` as values, so a supervisor can
+/// retire one poisoned request while the rest of the batch keeps going.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// `retire`/`preempt` addressed a lane with no seated session.
+    EmptyLane { lane: usize, op: &'static str },
+    /// A live session past prefill has no sampled token to feed back.
+    NoSampledToken { id: u64 },
+    /// The decoder requires aligned lanes (one shared position, e.g. the
+    /// scalar-pos PJRT attention path) but the engine schedules lanes at
+    /// independent positions; rejected at construction.
+    AlignedLanesOnly { lanes: usize },
+    /// The trace exceeded the configured safety stop.
+    MaxTicks { max: u64 },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::EmptyLane { lane, op } => {
+                write!(f, "engine invariant: {op} on empty lane {lane}")
+            }
+            EngineError::NoSampledToken { id } => {
+                write!(f, "engine invariant: request {id} past prefill with no sampled token")
+            }
+            EngineError::AlignedLanesOnly { lanes } => write!(
+                f,
+                "decoder only supports aligned lanes but the engine schedules {lanes} \
+                 lanes at independent positions (run with batch 1 or a ragged-capable \
+                 backend)"
+            ),
+            EngineError::MaxTicks { max } => {
+                write!(f, "engine exceeded max_ticks ({max})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// How a request left the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Full token stream produced (bitwise equal to `run_one`).
+    Finished,
+    /// Deadline passed while queued, ready, or running; tokens are a
+    /// prefix of the reference stream.
+    Expired,
+    /// Refused at admission: could not possibly finish by its deadline.
+    /// No lane steps were spent; no tokens.
+    Shed,
+    /// Decoder faults / corrupt state images exhausted the retry budget.
+    Failed { retries: u32 },
+}
 
 #[derive(Clone, Debug)]
 pub struct EngineCfg {
@@ -33,47 +113,78 @@ pub struct EngineCfg {
     pub preempt_after: Option<u64>,
     /// safety stop for runaway traces
     pub max_ticks: u64,
+    /// re-prefill replays allowed per request before it retires `Failed`
+    pub max_retries: u32,
+    /// deterministic fault plan (empty = inject nothing); shared with the
+    /// `FaultDecoder` wrapper when one is in play
+    pub fault: Arc<ServeFaultPlan>,
 }
 
 impl Default for EngineCfg {
     fn default() -> Self {
-        EngineCfg { max_pending: 1024, preempt_after: None, max_ticks: 10_000_000 }
+        EngineCfg {
+            max_pending: 1024,
+            preempt_after: None,
+            max_ticks: 10_000_000,
+            max_retries: 2,
+            fault: Arc::new(ServeFaultPlan::none()),
+        }
     }
 }
 
 /// Final per-request record (ticks are engine steps, deterministic).
+/// `admit_tick`/`first_token_tick` are `None` for requests that never
+/// reached a lane or never sampled (shed, early expiry).
 #[derive(Clone, Debug)]
 pub struct RequestResult {
     pub id: u64,
+    pub outcome: Outcome,
     pub tokens: Vec<i32>,
     pub arrival_tick: u64,
-    pub admit_tick: u64,
-    pub first_token_tick: u64,
+    pub admit_tick: Option<u64>,
+    pub first_token_tick: Option<u64>,
+    /// tick the request left the engine, whatever the outcome
     pub finish_tick: u64,
+    /// absolute deadline (`arrival + ttl`), if the request had one
+    pub deadline: Option<u64>,
     pub preemptions: u32,
+    /// re-prefill replays performed (faults + corrupt-state recoveries)
+    pub retries: u32,
 }
 
 impl RequestResult {
     /// Ticks spent queued before first entering a lane.
-    pub fn queue_wait(&self) -> u64 {
-        self.admit_tick - self.arrival_tick
+    pub fn queue_wait(&self) -> Option<u64> {
+        self.admit_tick.map(|t| t - self.arrival_tick)
     }
 
     /// Time-to-first-token in ticks from arrival.
-    pub fn ttft(&self) -> u64 {
-        self.first_token_tick - self.arrival_tick
+    pub fn ttft(&self) -> Option<u64> {
+        self.first_token_tick.map(|t| t - self.arrival_tick)
+    }
+
+    /// Ticks past the deadline at retirement (None: no deadline, or made
+    /// it in time -- note shed requests retire *before* their deadline).
+    pub fn deadline_miss(&self) -> Option<u64> {
+        let d = self.deadline?;
+        (self.finish_tick > d).then(|| self.finish_tick - d)
     }
 }
 
+/// Run summary.  Every field except `wall_secs` is a deterministic
+/// function of (trace, config, fault plan, decoder weights).
 #[derive(Clone, Debug, Default)]
 pub struct ServeReport {
     pub results: Vec<RequestResult>,
     /// engine clock at the end of the trace
     pub ticks: u64,
-    /// decoder step invocations (== ticks that ran a batch)
+    /// decoder step invocations that ran a batch (faulted attempts and
+    /// stalled ticks are excluded)
     pub steps: u64,
     /// sum over steps of the number of live lanes
     pub active_lane_steps: u64,
+    /// tokens of `Finished` requests only (goodput; partial streams of
+    /// expired/failed requests do not count)
     pub tokens_out: u64,
     pub wall_secs: f64,
     /// state check-ins/outs (preemption swaps; fresh admits are resets)
@@ -83,6 +194,19 @@ pub struct ServeReport {
     pub state_reallocs: u64,
     /// bounced submit attempts (backpressure)
     pub rejected: u64,
+    /// per-outcome request counts
+    pub outcomes: ServeOutcomes,
+    /// injected decode-step faults the engine absorbed
+    pub faults_injected: u64,
+    /// ticks burned by an injected backend stall
+    pub stalled_ticks: u64,
+    /// lane-state images that failed CRC verification at check-in
+    pub crc_failures: u64,
+    /// state corruptions the plan injected after CRC stamping
+    pub corruptions_injected: u64,
+    /// true when the CLI fell back from the requested backend (PJRT) to
+    /// the reference decoder; the engine itself never sets this
+    pub degraded: bool,
 }
 
 impl ServeReport {
@@ -106,7 +230,8 @@ pub struct Engine<D: Decoder> {
     pub dec: D,
     cfg: EngineCfg,
     queue: BoundedQueue<Session>,
-    /// preempted sessions waiting to resume; served before fresh admits
+    /// preempted/replaying sessions waiting to resume; served before
+    /// fresh admits
     ready: VecDeque<Session>,
     lanes: Vec<Option<Session>>,
     arena: StateArena,
@@ -115,14 +240,27 @@ pub struct Engine<D: Decoder> {
     active_lane_steps: u64,
     swaps: u64,
     swap_bytes: u64,
+    outcomes: ServeOutcomes,
+    faults_injected: u64,
+    stalled_ticks: u64,
+    crc_failures: u64,
+    corruptions_injected: u64,
+    /// any submitted request carried a TTL (skips expiry scans otherwise)
+    has_deadlines: bool,
     results: Vec<RequestResult>,
 }
 
 impl<D: Decoder> Engine<D> {
-    pub fn new(dec: D, cfg: EngineCfg) -> Self {
+    /// Rejects decoders that cannot serve ragged lanes (see
+    /// [`EngineError::AlignedLanesOnly`]) unless they run single-lane,
+    /// where every batch is trivially aligned.
+    pub fn new(dec: D, cfg: EngineCfg) -> Result<Self> {
+        if dec.aligned_lanes_only() && dec.lanes() > 1 {
+            return Err(EngineError::AlignedLanesOnly { lanes: dec.lanes() }.into());
+        }
         let lanes = (0..dec.lanes()).map(|_| None).collect();
         let queue = BoundedQueue::new(cfg.max_pending);
-        Engine {
+        Ok(Engine {
             dec,
             cfg,
             queue,
@@ -134,45 +272,169 @@ impl<D: Decoder> Engine<D> {
             active_lane_steps: 0,
             swaps: 0,
             swap_bytes: 0,
+            outcomes: ServeOutcomes::default(),
+            faults_injected: 0,
+            stalled_ticks: 0,
+            crc_failures: 0,
+            corruptions_injected: 0,
+            has_deadlines: false,
             results: Vec::new(),
-        }
+        })
     }
 
     /// Submit one request at the current tick; `Err` = backpressure.
     pub fn submit(&mut self, req: Request) -> Result<(), Request> {
         debug_assert!(!req.prompt.is_empty() && req.max_new >= 1);
+        self.has_deadlines |= req.ttl.is_some();
         self.queue
             .submit(Session::new(req, self.tick))
             .map_err(|s| s.req)
     }
 
+    /// Record a terminal outcome for a session (lane-held or not).
+    fn finish(&mut self, s: Session, outcome: Outcome) {
+        if let Some(st) = s.state {
+            self.arena.put(st);
+        }
+        match outcome {
+            Outcome::Finished => {
+                self.outcomes.finished += 1;
+                if s.retries > 0 {
+                    self.outcomes.recovered += 1;
+                }
+            }
+            Outcome::Expired => self.outcomes.expired += 1,
+            Outcome::Shed => self.outcomes.shed += 1,
+            Outcome::Failed { .. } => self.outcomes.failed += 1,
+        }
+        self.results.push(RequestResult {
+            id: s.req.id,
+            outcome,
+            tokens: s.generated,
+            arrival_tick: s.arrival_tick,
+            admit_tick: s.admit_tick,
+            first_token_tick: s.first_token_tick,
+            finish_tick: s.finish_tick.unwrap_or(self.tick),
+            deadline: s.deadline,
+            preemptions: s.preemptions,
+            retries: s.retries,
+        });
+    }
+
+    /// Retire the session seated on `lane` with `outcome`.
+    fn retire(&mut self, lane: usize, outcome: Outcome) -> Result<()> {
+        let s = self.lanes[lane]
+            .take()
+            .ok_or(EngineError::EmptyLane { lane, op: "retire" })?;
+        self.finish(s, outcome);
+        Ok(())
+    }
+
+    /// Expire every session whose deadline has passed -- queued, ready,
+    /// or running.  Partial tokens (a prefix of the reference stream) are
+    /// kept in the result.
+    fn expire(&mut self) {
+        if !self.has_deadlines {
+            return;
+        }
+        let tick = self.tick;
+        let late = |s: &Session| s.deadline.is_some_and(|d| tick > d);
+        for s in self.queue.extract(late) {
+            self.finish(s, Outcome::Expired);
+        }
+        let mut i = 0;
+        while i < self.ready.len() {
+            match self.ready.remove(i) {
+                Some(s) if late(&s) => self.finish(s, Outcome::Expired),
+                Some(s) => {
+                    self.ready.insert(i, s);
+                    i += 1;
+                }
+                None => break,
+            }
+        }
+        for lane in 0..self.lanes.len() {
+            if self.lanes[lane].as_ref().is_some_and(late) {
+                if let Some(s) = self.lanes[lane].take() {
+                    self.finish(s, Outcome::Expired);
+                }
+            }
+        }
+    }
+
     /// Fill idle lanes: resume preempted sessions first (FIFO), then admit
-    /// fresh requests with a zero-copy lane reset.
+    /// fresh requests with a zero-copy lane reset.  A lane loops until it
+    /// seats a session or both sources run dry, because candidates can
+    /// retire at the door (shed, retry budget spent).
     fn admit(&mut self) -> Result<()> {
         for lane in 0..self.lanes.len() {
-            if self.lanes[lane].is_some() {
-                continue;
+            while self.lanes[lane].is_none() {
+                if let Some(s) = self.ready.pop_front() {
+                    self.resume(lane, s)?;
+                } else if let Some(s) = self.queue.pop() {
+                    self.admit_fresh(lane, s)?;
+                } else {
+                    break;
+                }
             }
-            let mut s = if let Some(mut s) = self.ready.pop_front() {
-                let st = s.state.take().expect("preempted session must carry state");
+        }
+        Ok(())
+    }
+
+    /// Seat a previously-run session.  Its saved state image is loaded
+    /// only after passing the CRC check; a corrupted image is recycled
+    /// unread and the session replays from its prompt (or retires
+    /// `Failed` once the retry budget is spent).  A session with no state
+    /// (fault replay) re-prefills on a reset lane.
+    fn resume(&mut self, lane: usize, mut s: Session) -> Result<()> {
+        if let Some(st) = s.state.take() {
+            if lane_state_crc(&st) == s.state_crc {
                 self.dec.load_lane(lane, &st)?;
                 self.swaps += 1;
                 self.swap_bytes += st.size_bytes() as u64;
                 self.arena.put(st);
-                s
-            } else if let Some(s) = self.queue.pop() {
-                self.dec.reset_lane(lane)?;
-                s
-            } else {
-                break;
-            };
-            if s.admit_tick.is_none() {
-                s.admit_tick = Some(self.tick);
+                self.seat(lane, s);
+                return Ok(());
             }
-            s.resident_steps = 0;
-            self.lanes[lane] = Some(s);
+            self.crc_failures += 1;
+            self.arena.put(st);
+            if s.retries >= self.cfg.max_retries {
+                // budget spent: keep the partial stream (a prefix of the
+                // reference -- the corrupted image was never decoded from)
+                let retries = s.retries;
+                self.finish(s, Outcome::Failed { retries });
+                return Ok(());
+            }
+            s.rewind_for_replay();
         }
+        self.dec.reset_lane(lane)?;
+        self.seat(lane, s);
         Ok(())
+    }
+
+    /// Admit a fresh request, unless it provably cannot finish by its
+    /// deadline even with a lane all to itself -- then shed it now rather
+    /// than burn lane steps on a doomed request.
+    fn admit_fresh(&mut self, lane: usize, s: Session) -> Result<()> {
+        if let Some(d) = s.deadline {
+            // finishing takes min_service_steps ticks starting now; the
+            // last one lands at tick + steps - 1, which must be <= d
+            if self.tick + s.req.min_service_steps() > d + 1 {
+                self.finish(s, Outcome::Shed);
+                return Ok(());
+            }
+        }
+        self.dec.reset_lane(lane)?;
+        self.seat(lane, s);
+        Ok(())
+    }
+
+    fn seat(&mut self, lane: usize, mut s: Session) {
+        if s.admit_tick.is_none() {
+            s.admit_tick = Some(self.tick);
+        }
+        s.resident_steps = 0;
+        self.lanes[lane] = Some(s);
     }
 
     /// Work is waiting for a lane (preemption pays off).
@@ -180,37 +442,36 @@ impl<D: Decoder> Engine<D> {
         !self.ready.is_empty() || !self.queue.is_empty()
     }
 
-    fn retire(&mut self, lane: usize) {
-        let s = self.lanes[lane].take().expect("retire on empty lane");
-        if let Some(st) = s.state {
-            self.arena.put(st);
-        }
-        self.results.push(RequestResult {
-            id: s.req.id,
-            tokens: s.generated,
-            arrival_tick: s.arrival_tick,
-            admit_tick: s.admit_tick.expect("retired session was admitted"),
-            first_token_tick: s.first_token_tick.expect("retired session sampled"),
-            finish_tick: s.finish_tick.expect("retired session finished"),
-            preemptions: s.preemptions,
-        });
-    }
-
+    /// Swap a lane's session out: save its state, stamp the image CRC,
+    /// and park it on the ready queue.  The fault plan may flip a bit of
+    /// the image *after* stamping (bit-rot in the swapped-out copy) --
+    /// `resume` must catch that at check-in.
     fn preempt(&mut self, lane: usize) -> Result<()> {
-        let mut s = self.lanes[lane].take().expect("preempt on empty lane");
+        let mut s = self.lanes[lane]
+            .take()
+            .ok_or(EngineError::EmptyLane { lane, op: "preempt" })?;
         let mut st = s.state.take().unwrap_or_else(|| self.arena.take());
         self.dec.save_lane(lane, &mut st)?;
         self.swaps += 1;
         self.swap_bytes += st.size_bytes() as u64;
+        s.state_crc = lane_state_crc(&st);
+        if let Some(ServeFault::CorruptState { byte, .. }) =
+            self.cfg.fault.take_corrupt_state(s.req.id)
+        {
+            if corrupt_lane_state(&mut st, byte) {
+                self.corruptions_injected += 1;
+            }
+        }
         s.state = Some(st);
         s.preemptions += 1;
         self.ready.push_back(s);
-        self.lanes[lane] = None;
         Ok(())
     }
 
     /// One engine tick over currently admitted lanes: batch step, absorb
-    /// logits, retire finished lanes, preempt expired quanta.
+    /// logits, retire finished lanes, preempt expired quanta.  Returns
+    /// without advancing any lane when the decoder fails -- the caller
+    /// decides whether the error is an injected fault to absorb.
     fn step_batch(&mut self) -> Result<()> {
         let b = self.lanes.len();
         let mut toks = vec![0i32; b];
@@ -218,7 +479,7 @@ impl<D: Decoder> Engine<D> {
         let mut active = 0u64;
         for (l, slot) in self.lanes.iter().enumerate() {
             if let Some(s) = slot {
-                toks[l] = s.next_input();
+                toks[l] = s.next_input()?;
                 pos[l] = s.pos;
                 active += 1;
             }
@@ -233,7 +494,7 @@ impl<D: Decoder> Engine<D> {
             let Some(s) = self.lanes[lane].as_mut() else { continue };
             let done = s.absorb(&rows[lane * v..(lane + 1) * v], tick);
             if done {
-                self.retire(lane);
+                self.retire(lane, Outcome::Finished)?;
             } else if let Some(q) = self.cfg.preempt_after {
                 if self.lanes[lane].as_ref().is_some_and(|s| s.resident_steps >= q)
                     && self.has_waiters()
@@ -246,20 +507,46 @@ impl<D: Decoder> Engine<D> {
         Ok(())
     }
 
+    /// Absorb an injected decode-step fault: no lane advanced, so the
+    /// victim is rewound to its prompt and requeued (or retired `Failed`
+    /// past the retry budget) while every other lane replays the same
+    /// step next tick, untouched.  The tick is burned either way.
+    fn on_step_fault(&mut self, lane: usize) {
+        self.faults_injected += 1;
+        if let Some(slot) = self.lanes.get_mut(lane) {
+            if let Some(mut s) = slot.take() {
+                if let Some(st) = s.state.take() {
+                    self.arena.put(st);
+                }
+                if s.retries >= self.cfg.max_retries {
+                    // budget spent: the tokens sampled so far are a prefix
+                    // of the reference stream (the faulted step advanced
+                    // nothing), so keep them in the Failed record
+                    let retries = s.retries;
+                    self.finish(s, Outcome::Failed { retries });
+                } else {
+                    s.rewind_for_replay();
+                    self.ready.push_back(s);
+                }
+            }
+        }
+        self.tick += 1;
+    }
+
     /// Drive a full arrival trace to completion and report.  Arrivals
     /// that bounce off the full queue retry at the door every tick
-    /// (clients with backpressure), so every request is eventually served.
+    /// (clients with backpressure), so every request is eventually served,
+    /// shed, or expired.  Injected decoder faults are absorbed here; any
+    /// other decoder error propagates as a real backend failure.
     pub fn run_trace(&mut self, trace: &[Arrival]) -> Result<ServeReport> {
         debug_assert!(trace.windows(2).all(|w| w[0].at_tick <= w[1].at_tick));
         let t0 = Instant::now();
         let mut next = 0usize;
         let mut door: VecDeque<Request> = VecDeque::new();
         loop {
-            anyhow::ensure!(
-                self.tick < self.cfg.max_ticks,
-                "engine exceeded max_ticks ({})",
-                self.cfg.max_ticks
-            );
+            if self.tick >= self.cfg.max_ticks {
+                return Err(EngineError::MaxTicks { max: self.cfg.max_ticks }.into());
+            }
             while next < trace.len() && trace[next].at_tick <= self.tick {
                 door.push_back(trace[next].req.clone());
                 next += 1;
@@ -270,18 +557,40 @@ impl<D: Decoder> Engine<D> {
                     break;
                 }
             }
+            self.expire();
             self.admit()?;
             if self.lanes.iter().all(Option::is_none) {
                 if next >= trace.len() && door.is_empty() && !self.has_waiters() {
                     break;
                 }
-                // idle gap in the arrival trace: fast-forward the clock
-                self.tick = self.tick.max(trace[next].at_tick);
+                // idle gap in the arrival trace: fast-forward the clock.
+                // (With the trace drained, work can still be parked at the
+                // door -- e.g. the queue drained entirely by shedding --
+                // so step one tick and let the door drain next pass.)
+                if next < trace.len() {
+                    self.tick = self.tick.max(trace[next].at_tick);
+                } else {
+                    self.tick += 1;
+                }
                 continue;
             }
-            self.step_batch()?;
+            if let Err(e) = self.step_batch() {
+                match e.downcast_ref::<ServeFaultError>() {
+                    Some(&ServeFaultError::Step { lane }) => self.on_step_fault(lane),
+                    Some(&ServeFaultError::Stall) => {
+                        self.stalled_ticks += 1;
+                        self.tick += 1;
+                    }
+                    None => return Err(e),
+                }
+            }
         }
-        let tokens_out: u64 = self.results.iter().map(|r| r.tokens.len() as u64).sum();
+        let tokens_out: u64 = self
+            .results
+            .iter()
+            .filter(|r| r.outcome == Outcome::Finished)
+            .map(|r| r.tokens.len() as u64)
+            .sum();
         let mut results = std::mem::take(&mut self.results);
         results.sort_by_key(|r| r.id);
         Ok(ServeReport {
@@ -295,13 +604,20 @@ impl<D: Decoder> Engine<D> {
             swap_bytes: self.swap_bytes,
             state_reallocs: self.arena.reallocs(),
             rejected: self.queue.rejected,
+            outcomes: self.outcomes,
+            faults_injected: self.faults_injected,
+            stalled_ticks: self.stalled_ticks,
+            crc_failures: self.crc_failures,
+            corruptions_injected: self.corruptions_injected,
+            degraded: false,
         })
     }
 }
 
 /// Run one request alone on lane 0 -- the single-stream semantics the
 /// batched engine must reproduce bitwise.  Lane 0 is reset first; other
-/// lanes (if any) idle on pad tokens.
+/// lanes (if any) idle on pad tokens.  Deadlines are ignored: this is the
+/// reference stream a served request's tokens are compared against.
 pub fn run_one<D: Decoder>(dec: &mut D, req: &Request) -> Result<Vec<i32>> {
     anyhow::ensure!(!req.prompt.is_empty() && req.max_new >= 1, "empty request");
     let b = dec.lanes();
@@ -310,7 +626,7 @@ pub fn run_one<D: Decoder>(dec: &mut D, req: &Request) -> Result<Vec<i32>> {
     loop {
         let mut toks = vec![0i32; b];
         let mut pos = vec![0i32; b];
-        toks[0] = s.next_input();
+        toks[0] = s.next_input()?;
         pos[0] = s.pos;
         let logits = dec.decode_step(&Tensor::i32(&[b], toks), &pos)?;
         let v = *logits.shape.last().unwrap();

@@ -1,0 +1,471 @@
+//! Deterministic fault injection for the serving engine, plus the CRC
+//! integrity layer on lane-state images.
+//!
+//! This is the serving counterpart of `crate::fault` (training): the same
+//! one-shot, coordinate-addressed design and the same CLI clause grammar
+//! (`crate::fault::parse_clauses`), so a failing serving scenario is one
+//! `--fault` string to reproduce.  A [`ServeFaultPlan`] holds:
+//!
+//!  - `StepError { step, lane }`: the `step`-th `decode_step` attempt
+//!    fails with a typed [`ServeFaultError::Step`] naming a victim lane.
+//!    The wrapper errors *before* touching the inner decoder, modeling a
+//!    backend launch failure: no lane's state advanced, so the engine can
+//!    retire or re-prefill the victim and retry the batch next tick.
+//!  - `CorruptState { req, byte }`: flip one bit of request `req`'s next
+//!    saved lane-state image *after* the engine stamps its CRC -- bit-rot
+//!    in the swapped-out image.  The engine must detect it on resume and
+//!    re-prefill instead of decoding from garbage.
+//!  - `Stall { step, ticks }`: `decode_step` reports
+//!    [`ServeFaultError::Stall`] for `ticks` consecutive attempts -- a hung
+//!    backend.  The engine burns ticks (deadlines keep running) without
+//!    advancing any lane.
+//!
+//! Injection points split by what they model: [`FaultDecoder`] wraps any
+//! `Decoder` and claims step errors and stalls at the decode boundary;
+//! the engine itself claims state corruption, because corruption must
+//! land between CRC stamping and CRC verification to exercise the
+//! integrity path (a flip before stamping would be checksummed in).
+//!
+//! The CRC helpers hash a `LaneState` image the way checkpoint format v2
+//! hashes files (`checkpoint::Crc32`, streaming -- no staging buffer):
+//! dtype, rank, dims, and payload bits of every tensor, so shape-preserving
+//! payload flips and shape edits are both caught.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::checkpoint::Crc32;
+use crate::fault::parse_clauses;
+use crate::inference::{Decoder, LaneState};
+use crate::rng::Rng;
+use crate::tensor::{Data, Tensor};
+
+/// One injectable serving fault (see module docs for semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeFault {
+    /// Fail the `step`-th `decode_step` attempt, blaming `lane`.
+    StepError { step: u64, lane: usize },
+    /// Flip one bit of request `req`'s next saved lane-state image, at
+    /// byte offset `byte` (mod image size).
+    CorruptState { req: u64, byte: usize },
+    /// Starting at the `step`-th `decode_step` attempt, stall for `ticks`
+    /// attempts.
+    Stall { step: u64, ticks: u64 },
+}
+
+/// Typed error surfaced by [`FaultDecoder::decode_step`]; the engine
+/// downcasts (`anyhow::Error::downcast_ref`) to tell injected faults from
+/// real backend failures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeFaultError {
+    /// Decode-step failure attributed to one victim lane.
+    Step { lane: usize },
+    /// The backend is stalled; no lane advanced this tick.
+    Stall,
+}
+
+impl std::fmt::Display for ServeFaultError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeFaultError::Step { lane } => {
+                write!(f, "injected decoder step error on lane {lane}")
+            }
+            ServeFaultError::Stall => write!(f, "injected decoder stall"),
+        }
+    }
+}
+
+impl std::error::Error for ServeFaultError {}
+
+/// A deterministic set of one-shot serving faults.  Shared (via `Arc`)
+/// between the [`FaultDecoder`] wrapper (step errors, stalls) and the
+/// engine (state corruption).
+#[derive(Debug, Default)]
+pub struct ServeFaultPlan {
+    faults: Vec<ServeFault>,
+    fired: Vec<AtomicBool>,
+}
+
+impl ServeFaultPlan {
+    /// The empty plan: injects nothing.
+    pub fn none() -> Self {
+        ServeFaultPlan::default()
+    }
+
+    pub fn new(faults: Vec<ServeFault>) -> Self {
+        let fired = faults.iter().map(|_| AtomicBool::new(false)).collect();
+        ServeFaultPlan { faults, fired }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn faults(&self) -> &[ServeFault] {
+        &self.faults
+    }
+
+    /// Parse a serving `--fault` spec (shared clause grammar):
+    /// `step_err:step=S,lane=L` | `corrupt_state:req=R[,byte=B]` |
+    /// `stall:step=S,ticks=N`, `;`-separated.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut faults = Vec::new();
+        for c in parse_clauses(spec)? {
+            let fault = match c.kind.as_str() {
+                "step_err" => {
+                    c.allow(&["step", "lane"])?;
+                    ServeFault::StepError {
+                        step: c.need("step")?,
+                        lane: c.need("lane")? as usize,
+                    }
+                }
+                "corrupt_state" => {
+                    c.allow(&["req", "byte"])?;
+                    ServeFault::CorruptState {
+                        req: c.need("req")?,
+                        byte: c.get("byte").unwrap_or(0) as usize,
+                    }
+                }
+                "stall" => {
+                    c.allow(&["step", "ticks"])?;
+                    ServeFault::Stall {
+                        step: c.need("step")?,
+                        ticks: c.need("ticks")?.max(1),
+                    }
+                }
+                other => bail!("unknown serving fault kind {other:?}"),
+            };
+            faults.push(fault);
+        }
+        Ok(ServeFaultPlan::new(faults))
+    }
+
+    /// Seeded soak-style generator: step errors drawn Bernoulli(`rate`)
+    /// per decode attempt over `horizon` attempts, each blaming a random
+    /// lane in `[0, lanes)`.  Deterministic in `seed`; `rate = 0` is the
+    /// empty plan.  This drives the bench fault-rate sweep.
+    pub fn seeded_step_errors(seed: u64, horizon: u64, lanes: usize, rate: f64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut faults = Vec::new();
+        for step in 0..horizon {
+            // draw both variates unconditionally so the fault coordinates
+            // at a given step do not depend on `rate`
+            let u = rng.f32() as f64;
+            let lane = rng.below(lanes.max(1));
+            if u < rate {
+                faults.push(ServeFault::StepError { step, lane });
+            }
+        }
+        ServeFaultPlan::new(faults)
+    }
+
+    /// Atomically claim the first unfired fault matching `pred` (fires
+    /// exactly once across all claimants).
+    fn take(&self, pred: impl Fn(&ServeFault) -> bool) -> Option<ServeFault> {
+        for (i, f) in self.faults.iter().enumerate() {
+            if pred(f)
+                && self.fired[i]
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                return Some(*f);
+            }
+        }
+        None
+    }
+
+    /// Claim a step error addressed to decode attempt `step`.
+    pub fn take_step_error(&self, step: u64) -> Option<ServeFault> {
+        self.take(|f| matches!(f, ServeFault::StepError { step: s, .. } if *s == step))
+    }
+
+    /// Claim a stall starting at decode attempt `step`.
+    pub fn take_stall(&self, step: u64) -> Option<ServeFault> {
+        self.take(|f| matches!(f, ServeFault::Stall { step: s, .. } if *s == step))
+    }
+
+    /// Claim a state corruption addressed to request `req` (called by the
+    /// engine right after stamping the image CRC).
+    pub fn take_corrupt_state(&self, req: u64) -> Option<ServeFault> {
+        self.take(|f| matches!(f, ServeFault::CorruptState { req: r, .. } if *r == req))
+    }
+
+    /// Number of faults already fired (observability).
+    pub fn fired_count(&self) -> usize {
+        self.fired.iter().filter(|f| f.load(Ordering::Acquire)).count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault-wrapping decoder adapter.
+// ---------------------------------------------------------------------------
+
+/// Wraps any [`Decoder`] and injects the plan's step errors and stalls at
+/// the `decode_step` boundary.  All state operations delegate untouched
+/// (state corruption is the engine's injection point, after CRC stamping).
+/// The attempt counter ticks on *every* `decode_step` call, including
+/// injected failures, so fault coordinates are deterministic under any
+/// interleaving.
+pub struct FaultDecoder<D: Decoder> {
+    inner: D,
+    plan: Arc<ServeFaultPlan>,
+    /// decode attempts so far (== the `step` coordinate faults address)
+    step: u64,
+    stall_left: u64,
+    pub injected_step_errors: u64,
+    pub injected_stall_ticks: u64,
+}
+
+impl<D: Decoder> FaultDecoder<D> {
+    pub fn new(inner: D, plan: Arc<ServeFaultPlan>) -> Self {
+        FaultDecoder {
+            inner,
+            plan,
+            step: 0,
+            stall_left: 0,
+            injected_step_errors: 0,
+            injected_stall_ticks: 0,
+        }
+    }
+
+    pub fn into_inner(self) -> D {
+        self.inner
+    }
+}
+
+impl<D: Decoder> Decoder for FaultDecoder<D> {
+    fn lanes(&self) -> usize {
+        self.inner.lanes()
+    }
+
+    fn decode_step(&mut self, tokens: &Tensor, pos: &[i32]) -> Result<Tensor> {
+        let step = self.step;
+        self.step += 1;
+        if self.stall_left == 0 {
+            if let Some(ServeFault::Stall { ticks, .. }) = self.plan.take_stall(step) {
+                self.stall_left = ticks;
+            }
+        }
+        if self.stall_left > 0 {
+            self.stall_left -= 1;
+            self.injected_stall_ticks += 1;
+            return Err(ServeFaultError::Stall.into());
+        }
+        if let Some(ServeFault::StepError { lane, .. }) = self.plan.take_step_error(step) {
+            self.injected_step_errors += 1;
+            return Err(ServeFaultError::Step { lane }.into());
+        }
+        self.inner.decode_step(tokens, pos)
+    }
+
+    fn save_lane(&self, lane: usize, out: &mut LaneState) -> Result<()> {
+        self.inner.save_lane(lane, out)
+    }
+
+    fn load_lane(&mut self, lane: usize, src: &LaneState) -> Result<()> {
+        self.inner.load_lane(lane, src)
+    }
+
+    fn reset_lane(&mut self, lane: usize) -> Result<()> {
+        self.inner.reset_lane(lane)
+    }
+
+    fn lane_state_bytes(&self, pos: usize) -> usize {
+        self.inner.lane_state_bytes(pos)
+    }
+
+    fn aligned_lanes_only(&self) -> bool {
+        self.inner.aligned_lanes_only()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane-state image integrity (the checkpoint-v2 CRC approach, in RAM).
+// ---------------------------------------------------------------------------
+
+/// CRC-32 over a lane-state image: per tensor, dtype tag, rank, dims, and
+/// the exact payload bits (f32 via `to_bits`, so any stored-bit flip --
+/// including NaN-payload and signed-zero changes -- alters the digest).
+/// Streaming: allocates nothing.
+pub fn lane_state_crc(st: &LaneState) -> u32 {
+    let mut h = Crc32::new();
+    for t in &st.tensors {
+        h.update(&[t.is_f32() as u8]);
+        h.update(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            h.update(&(d as u64).to_le_bytes());
+        }
+        match &t.data {
+            Data::F32(v) => {
+                for x in v {
+                    h.update(&x.to_bits().to_le_bytes());
+                }
+            }
+            Data::I32(v) => {
+                for x in v {
+                    h.update(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    h.finish()
+}
+
+/// Flip one bit of the element containing byte `byte` (mod payload size).
+/// Returns false when the image has no payload to corrupt.
+pub fn corrupt_lane_state(st: &mut LaneState, byte: usize) -> bool {
+    let total: usize = st.tensors.iter().map(Tensor::size_bytes).sum();
+    if total == 0 {
+        return false;
+    }
+    let mut off = byte % total;
+    for t in &mut st.tensors {
+        let sz = t.size_bytes();
+        if off >= sz {
+            off -= sz;
+            continue;
+        }
+        let elem = off / 4;
+        match &mut t.data {
+            Data::F32(v) => v[elem] = f32::from_bits(v[elem].to_bits() ^ 1),
+            Data::I32(v) => v[elem] ^= 1,
+        }
+        return true;
+    }
+    unreachable!("offset reduced below total payload size")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::refmodel::RefLsmDecoder;
+
+    #[test]
+    fn parses_serving_grammar() {
+        let p = ServeFaultPlan::parse(
+            "step_err:step=30,lane=1;corrupt_state:req=3;stall:step=50,ticks=20;\
+             corrupt_state:req=7,byte=9",
+        )
+        .unwrap();
+        assert_eq!(
+            p.faults(),
+            &[
+                ServeFault::StepError { step: 30, lane: 1 },
+                ServeFault::CorruptState { req: 3, byte: 0 },
+                ServeFault::Stall { step: 50, ticks: 20 },
+                ServeFault::CorruptState { req: 7, byte: 9 },
+            ]
+        );
+        assert!(ServeFaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(ServeFaultPlan::parse("step_err").is_err());
+        assert!(ServeFaultPlan::parse("step_err:step=1").is_err()); // missing lane
+        assert!(ServeFaultPlan::parse("step_err:step=1,lane=0,rank=2").is_err());
+        assert!(ServeFaultPlan::parse("corrupt_state:byte=3").is_err()); // missing req
+        assert!(ServeFaultPlan::parse("stall:step=x,ticks=2").is_err());
+        assert!(ServeFaultPlan::parse("explode:step=1").is_err());
+    }
+
+    #[test]
+    fn faults_fire_exactly_once() {
+        let p = ServeFaultPlan::parse("step_err:step=5,lane=0;corrupt_state:req=2").unwrap();
+        assert!(p.take_step_error(4).is_none());
+        assert_eq!(
+            p.take_step_error(5),
+            Some(ServeFault::StepError { step: 5, lane: 0 })
+        );
+        assert!(p.take_step_error(5).is_none(), "one-shot");
+        assert!(p.take_corrupt_state(1).is_none());
+        assert!(p.take_corrupt_state(2).is_some());
+        assert!(p.take_corrupt_state(2).is_none());
+        assert_eq!(p.fired_count(), 2);
+    }
+
+    #[test]
+    fn seeded_step_errors_deterministic_and_rate_scaled() {
+        let a = ServeFaultPlan::seeded_step_errors(3, 1000, 4, 0.05);
+        let b = ServeFaultPlan::seeded_step_errors(3, 1000, 4, 0.05);
+        assert_eq!(a.faults(), b.faults());
+        assert!(ServeFaultPlan::seeded_step_errors(3, 1000, 4, 0.0).is_empty());
+        let lo = ServeFaultPlan::seeded_step_errors(3, 1000, 4, 0.01).faults().len();
+        let hi = a.faults().len();
+        assert!(hi > lo, "5% plan ({hi}) must inject more than 1% ({lo})");
+        assert!(hi >= 20 && hi <= 110, "rate wildly off: {hi} faults in 1000 steps");
+        for f in a.faults() {
+            match *f {
+                ServeFault::StepError { step, lane } => {
+                    assert!(step < 1000 && lane < 4);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // higher-rate plan is a superset of the lower-rate plan at the
+        // same seed (coordinates are rate-invariant)
+        let lo_plan = ServeFaultPlan::seeded_step_errors(3, 1000, 4, 0.01);
+        for f in lo_plan.faults() {
+            assert!(a.faults().contains(f), "{f:?} missing at higher rate");
+        }
+    }
+
+    #[test]
+    fn fault_decoder_injects_then_delegates() {
+        let plan = Arc::new(
+            ServeFaultPlan::parse("step_err:step=1,lane=0;stall:step=3,ticks=2").unwrap(),
+        );
+        let mut dec = FaultDecoder::new(RefLsmDecoder::new(1, 16, 4, 7), plan);
+        let tok = Tensor::i32(&[1], vec![3]);
+        let mut ok_logits = Vec::new();
+        ok_logits.push(dec.decode_step(&tok, &[0]).expect("step 0 clean"));
+        let err = dec.decode_step(&tok, &[1]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ServeFaultError>(),
+            Some(&ServeFaultError::Step { lane: 0 })
+        );
+        ok_logits.push(dec.decode_step(&tok, &[1]).expect("step 2 clean"));
+        for attempt in 0..2 {
+            let err = dec.decode_step(&tok, &[2]).unwrap_err();
+            assert_eq!(
+                err.downcast_ref::<ServeFaultError>(),
+                Some(&ServeFaultError::Stall),
+                "stall attempt {attempt}"
+            );
+        }
+        ok_logits.push(dec.decode_step(&tok, &[2]).expect("stall over"));
+        assert_eq!(dec.injected_step_errors, 1);
+        assert_eq!(dec.injected_stall_ticks, 2);
+        // injected failures never touched inner state: the successful
+        // steps match a clean decoder fed the same token sequence
+        let mut clean = RefLsmDecoder::new(1, 16, 4, 7);
+        for (p, got) in ok_logits.iter().enumerate() {
+            let want = clean.decode_step(&tok, &[p as i32]).unwrap();
+            assert_eq!(got.as_f32().unwrap(), want.as_f32().unwrap(), "step {p}");
+        }
+    }
+
+    #[test]
+    fn crc_detects_any_single_bit_flip() {
+        let mut st = LaneState::default();
+        st.slot(0, &[3], true).as_f32_mut().unwrap().copy_from_slice(&[1.0, -2.5, 0.0]);
+        st.slot(1, &[2], false).as_i32_mut().unwrap().copy_from_slice(&[7, -9]);
+        st.tensors.truncate(2);
+        let clean = lane_state_crc(&st);
+        assert_eq!(clean, lane_state_crc(&st), "digest is a pure function");
+        let total: usize = st.tensors.iter().map(Tensor::size_bytes).sum();
+        for byte in 0..total {
+            let mut copy = st.clone();
+            assert!(corrupt_lane_state(&mut copy, byte));
+            assert_ne!(lane_state_crc(&copy), clean, "flip at byte {byte} undetected");
+        }
+        // shape edits are caught too, not just payload flips
+        let mut reshaped = st.clone();
+        reshaped.tensors[0].shape = vec![1, 3];
+        assert_ne!(lane_state_crc(&reshaped), clean);
+        // empty images cannot be corrupted
+        assert!(!corrupt_lane_state(&mut LaneState::default(), 0));
+    }
+}

@@ -17,18 +17,29 @@
 //!               step loop, round-robin preemption, termination, metrics
 //!  - `refmodel`: artifact-free reference backends (constant-state LSM vs
 //!               KV-staircase attention) for tests, benches, and the CLI
+//!  - `fault`:   deterministic serving fault injection (decoder step
+//!               errors, lane-state bit-rot, backend stalls) plus the
+//!               CRC-32 integrity layer on lane-state images
 //!
 //! Per-lane computation is lane-independent, so the engine is
 //! semantics-preserving: each request's token stream is bitwise identical
 //! to running it alone single-stream (`tests/serve.rs` pins this down).
+//! The engine supervises faults without giving that up: non-victim lanes
+//! stay bitwise identical, victims recover by deterministic replay or
+//! retire with typed outcomes, and requests carry deadlines the scheduler
+//! enforces by expiry and admission-time shedding (`tests/serve_faults.rs`).
 
 pub mod engine;
+pub mod fault;
 pub mod queue;
 pub mod refmodel;
 pub mod sampler;
 pub mod session;
 
-pub use engine::{Engine, EngineCfg, RequestResult, ServeReport};
+pub use engine::{run_one, Engine, EngineCfg, EngineError, Outcome, RequestResult,
+                 ServeReport};
+pub use fault::{corrupt_lane_state, lane_state_crc, FaultDecoder, ServeFault,
+                ServeFaultError, ServeFaultPlan};
 pub use queue::{poisson_trace, Arrival, BoundedQueue, Request};
 pub use refmodel::{RefAttnDecoder, RefLsmDecoder};
 pub use sampler::{Sampler, Sampling};

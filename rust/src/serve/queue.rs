@@ -19,6 +19,21 @@ pub struct Request {
     pub eos: Option<i32>,
     pub sampling: Sampling,
     pub seed: u64,
+    /// Deadline as a TTL in engine ticks from arrival: the request must
+    /// finish by `arrival_tick + ttl` or it is expired (running/queued)
+    /// or shed at admission (when it provably cannot finish in time).
+    /// `None` = no deadline.
+    pub ttl: Option<u64>,
+}
+
+impl Request {
+    /// Worst-case decode steps to completion from a cold start: every
+    /// prompt token but the last is a prefill step, then up to `max_new`
+    /// sampling steps (EOS may finish earlier; admission control is
+    /// deliberately conservative and budgets the worst case).
+    pub fn min_service_steps(&self) -> u64 {
+        (self.prompt.len().saturating_sub(1) + self.max_new) as u64
+    }
 }
 
 /// A request plus the engine tick it arrives at.
@@ -84,6 +99,22 @@ impl<T> BoundedQueue<T> {
         self.items.pop_front()
     }
 
+    /// Remove and return every queued item matching `pred`, preserving
+    /// FIFO order of the rest (deadline-expiry scans).
+    pub fn extract(&mut self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut out = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.items.len());
+        for item in self.items.drain(..) {
+            if pred(&item) {
+                out.push(item);
+            } else {
+                kept.push_back(item);
+            }
+        }
+        self.items = kept;
+        out
+    }
+
     pub fn len(&self) -> usize {
         self.items.len()
     }
@@ -105,7 +136,33 @@ mod tests {
             eos: None,
             sampling: Sampling::Greedy,
             seed: id,
+            ttl: None,
         }
+    }
+
+    #[test]
+    fn extract_removes_matches_keeps_fifo() {
+        let mut q = BoundedQueue::new(8);
+        for id in 0..5 {
+            q.submit(req(id)).unwrap();
+        }
+        let out = q.extract(|r| r.id % 2 == 1);
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 4);
+        assert!(q.extract(|_| true).is_empty());
+    }
+
+    #[test]
+    fn min_service_steps_budget() {
+        let mut r = req(0);
+        r.prompt = vec![1, 2, 3]; // 2 prefill steps
+        r.max_new = 4;
+        assert_eq!(r.min_service_steps(), 6);
+        r.prompt = vec![1];
+        assert_eq!(r.min_service_steps(), 4);
     }
 
     #[test]

@@ -3,15 +3,28 @@
 //! A `Session` owns everything one request needs to ride a decode lane:
 //! the prompt cursor, the sampled tokens, the seeded sampler, tick-based
 //! metrics, and -- while preempted out of the batch -- its saved recurrent
-//! state.  Because LSM state is O(1) per lane, checking a session in or
-//! out of a lane is a constant-size memcpy regardless of position.
+//! state plus the CRC-32 stamped over that image when it was checked out
+//! (verified before the image is ever loaded back into a lane).  Because
+//! LSM state is O(1) per lane, checking a session in or out of a lane is
+//! a constant-size memcpy regardless of position.
+//!
+//! Recovery is a *replay*: a session whose decoder step faulted or whose
+//! saved state failed its CRC is rewound to the prompt
+//! (`rewind_for_replay`) and re-prefilled.  Sampling is a pure function
+//! of (request seed, logits sequence), so a replayed attempt regenerates
+//! the exact same token stream -- recovered requests stay bitwise
+//! identical to an undisturbed run, and a half-finished attempt is always
+//! a prefix of the reference stream (never wrong tokens).
 //!
 //! `StateArena` is a free-list of `LaneState` buffers: finished sessions
 //! recycle their buffers, so steady-state admission and preemption
 //! allocate nothing when shapes repeat (zero-copy where shapes allow).
 
+use anyhow::Result;
+
 use crate::inference::LaneState;
 
+use super::engine::EngineError;
 use super::queue::Request;
 use super::sampler::Sampler;
 
@@ -23,11 +36,17 @@ pub struct Session {
     pub generated: Vec<i32>,
     /// saved recurrent state while not resident in a lane
     pub state: Option<LaneState>,
+    /// CRC-32 of `state` stamped at check-out; verified at check-in
+    pub state_crc: u32,
+    /// absolute deadline tick (`arrival + ttl`), None = no deadline
+    pub deadline: Option<u64>,
     pub arrival_tick: u64,
     pub admit_tick: Option<u64>,
     pub first_token_tick: Option<u64>,
     pub finish_tick: Option<u64>,
     pub preemptions: u32,
+    /// re-prefill replays so far (decoder faults + corrupt-state recoveries)
+    pub retries: u32,
     /// decode steps since the session last entered a lane (preempt quantum)
     pub resident_steps: u64,
 }
@@ -35,32 +54,38 @@ pub struct Session {
 impl Session {
     pub fn new(req: Request, arrival_tick: u64) -> Self {
         let sampler = Sampler::new(req.sampling, req.seed);
+        let deadline = req.ttl.map(|t| arrival_tick.saturating_add(t));
         Session {
             req,
             sampler,
             pos: 0,
             generated: Vec::new(),
             state: None,
+            state_crc: 0,
+            deadline,
             arrival_tick,
             admit_tick: None,
             first_token_tick: None,
             finish_tick: None,
             preemptions: 0,
+            retries: 0,
             resident_steps: 0,
         }
     }
 
     /// Token to feed at the current position: the prompt during prefill,
-    /// afterwards the last sampled token.
-    pub fn next_input(&self) -> i32 {
+    /// afterwards the last sampled token.  A live session past prefill
+    /// with no sampled token is an engine invariant violation, surfaced
+    /// as a typed error instead of a process abort.
+    pub fn next_input(&self) -> Result<i32> {
         let p = self.pos as usize;
         if p < self.req.prompt.len() {
-            self.req.prompt[p]
+            Ok(self.req.prompt[p])
         } else {
-            *self
-                .generated
+            self.generated
                 .last()
-                .expect("live session past prefill must have sampled")
+                .copied()
+                .ok_or_else(|| EngineError::NoSampledToken { id: self.req.id }.into())
         }
     }
 
@@ -68,6 +93,30 @@ impl Session {
     /// the step about to run will be discarded)?
     pub fn in_prefill(&self) -> bool {
         (self.pos as usize) + 1 < self.req.prompt.len()
+    }
+
+    /// Rewind to a fresh prompt replay after a decoder fault or a
+    /// corrupted state image: cursor, sampled tokens, sampler RNG, and
+    /// state all reset; arrival/admission metrics and fault counters are
+    /// kept.  Determinism of the sampler in the request seed makes the
+    /// replayed stream bitwise identical to an undisturbed run.
+    pub fn rewind_for_replay(&mut self) {
+        self.sampler = Sampler::new(self.req.sampling, self.req.seed);
+        self.pos = 0;
+        self.generated.clear();
+        self.state = None;
+        self.state_crc = 0;
+        self.resident_steps = 0;
+        self.retries += 1;
+    }
+
+    /// Worst-case decode steps still needed to finish from the current
+    /// cursor (prefill remainder + unsampled token budget; EOS may cut
+    /// this short, the budget is deliberately conservative).
+    pub fn min_remaining_steps(&self) -> u64 {
+        let prefill = self.req.prompt.len().saturating_sub(1 + self.pos as usize);
+        let decode = self.req.max_new.saturating_sub(self.generated.len());
+        (prefill + decode) as u64
     }
 
     /// Consume the logits row produced by feeding position `pos`: advance
@@ -129,22 +178,32 @@ mod tests {
     use crate::serve::sampler::Sampling;
 
     fn req(prompt: Vec<i32>, max_new: usize, eos: Option<i32>) -> Request {
-        Request { id: 0, prompt, max_new, eos, sampling: Sampling::Greedy, seed: 1 }
+        Request {
+            id: 0,
+            prompt,
+            max_new,
+            eos,
+            sampling: Sampling::Greedy,
+            seed: 1,
+            ttl: None,
+        }
     }
 
     #[test]
     fn prefill_then_decode_then_budget_stop() {
         // prompt [5, 6]; greedy over a 3-token vocab
         let mut s = Session::new(req(vec![5, 6], 2, None), 0);
-        assert_eq!(s.next_input(), 5);
+        assert_eq!(s.next_input().unwrap(), 5);
         assert!(s.in_prefill());
+        assert_eq!(s.min_remaining_steps(), 3);
         assert!(!s.absorb(&[0., 0., 1.], 10)); // prefill step: no sample
-        assert_eq!(s.next_input(), 6);
+        assert_eq!(s.next_input().unwrap(), 6);
         assert!(!s.in_prefill());
         assert!(!s.absorb(&[0., 0., 1.], 11)); // last prompt token: samples 2
         assert_eq!(s.generated, vec![2]);
         assert_eq!(s.first_token_tick, Some(11));
-        assert_eq!(s.next_input(), 2);
+        assert_eq!(s.min_remaining_steps(), 1);
+        assert_eq!(s.next_input().unwrap(), 2);
         assert!(s.absorb(&[1., 0., 0.], 12)); // budget of 2 reached
         assert_eq!(s.generated, vec![2, 0]);
         assert_eq!(s.finish_tick, Some(12));
@@ -155,6 +214,58 @@ mod tests {
         let mut s = Session::new(req(vec![1], 100, Some(2)), 0);
         assert!(s.absorb(&[0., 0., 1.], 5), "sampling EOS must finish");
         assert_eq!(s.generated, vec![2]);
+    }
+
+    #[test]
+    fn past_prefill_without_sample_is_typed_error() {
+        let mut s = Session::new(req(vec![7], 4, None), 0);
+        s.pos = 1; // cursor past the prompt with nothing sampled
+        let err = s.next_input().unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<EngineError>(),
+            Some(EngineError::NoSampledToken { id: 0 })
+        ));
+    }
+
+    #[test]
+    fn deadline_is_arrival_plus_ttl() {
+        let mut r = req(vec![1, 2], 3, None);
+        r.ttl = Some(10);
+        let s = Session::new(r, 7);
+        assert_eq!(s.deadline, Some(17));
+        assert_eq!(Session::new(req(vec![1], 1, None), 7).deadline, None);
+    }
+
+    #[test]
+    fn rewind_replays_identical_stream() {
+        let mut r = req(vec![5, 6], 3, None);
+        r.sampling = Sampling::TopK { k: 2, temp: 1.0 };
+        let rows: Vec<Vec<f32>> = vec![
+            vec![0.1, 0.9, 0.3],
+            vec![0.7, 0.2, 0.4],
+            vec![0.5, 0.5, 0.1],
+            vec![0.9, 0.1, 0.2],
+        ];
+        let mut s = Session::new(r, 0);
+        for row in &rows {
+            if s.absorb(row, 1) {
+                break;
+            }
+        }
+        let first = s.generated.clone();
+        assert!(!first.is_empty());
+        s.first_token_tick = Some(1);
+        s.rewind_for_replay();
+        assert_eq!(s.pos, 0);
+        assert!(s.generated.is_empty());
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.first_token_tick, Some(1), "metrics survive the rewind");
+        for row in &rows {
+            if s.absorb(row, 2) {
+                break;
+            }
+        }
+        assert_eq!(s.generated, first, "replay must regenerate the same stream");
     }
 
     #[test]

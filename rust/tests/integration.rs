@@ -17,6 +17,26 @@ use linear_moe::tensor::{Bundle, Tensor};
 
 const DIR: &str = "artifacts";
 
+/// Artifact gate: these tests need `make artifacts` output.  When the
+/// manifest is absent (e.g. a CI box without the JAX toolchain) each test
+/// skips cleanly instead of erroring, so `cargo test --test integration`
+/// is safe to run unconditionally.
+fn have_artifacts() -> bool {
+    std::path::Path::new(DIR).join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    ($name:literal) => {
+        if !have_artifacts() {
+            eprintln!(
+                "skipping {}: no artifacts (run `make artifacts`)",
+                $name
+            );
+            return;
+        }
+    };
+}
+
 fn batch_fn(vocab: usize, b: usize) -> BatchFn {
     Arc::new(move |idx: usize, n: usize| {
         let mut lm = data::ZipfLm::new(vocab, 1000 + idx as u64);
@@ -41,6 +61,7 @@ fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
 // -------------------------------------------------------------------------
 #[test]
 fn lasp_sp_equals_serial_and_modes_agree() {
+    require_artifacts!("lasp_sp_equals_serial_and_modes_agree");
     // serial reference: run the same chunks through sp_state/sp_output on
     // one rank, folding prefixes locally.
     let rt = Runtime::new(DIR).unwrap();
@@ -131,6 +152,7 @@ fn lasp_sp_equals_serial_and_modes_agree() {
 // -------------------------------------------------------------------------
 #[test]
 fn lasp2_comm_volume_independent_of_chunk_content() {
+    require_artifacts!("lasp2_comm_volume_independent_of_chunk_content");
     let rt = Runtime::new(DIR).unwrap();
     let spec = rt.manifest.artifact("sp_state_none").unwrap();
     let kshape = spec.args[0].shape.clone();
@@ -169,6 +191,7 @@ fn lasp2_comm_volume_independent_of_chunk_content() {
 // -------------------------------------------------------------------------
 #[test]
 fn ddp_matches_single_worker() {
+    require_artifacts!("ddp_matches_single_worker");
     let vocab = 2048;
     let steps = 3;
     let dp = 2;
@@ -203,6 +226,7 @@ fn ddp_matches_single_worker() {
 // -------------------------------------------------------------------------
 #[test]
 fn pipeline_composition_matches_monolith() {
+    require_artifacts!("pipeline_composition_matches_monolith");
     let rt = Runtime::new(DIR).unwrap();
     let tag = "tiny_gla";
     let var = rt.manifest.variant(tag).unwrap().clone();
@@ -287,6 +311,7 @@ fn pipeline_composition_matches_monolith() {
 // -------------------------------------------------------------------------
 #[test]
 fn moe_strategies_agree_numerically() {
+    require_artifacts!("moe_strategies_agree_numerically");
     let rt = Runtime::new(DIR).unwrap();
     let layer = MoeLayer::new(&rt, "tiny").unwrap();
     let mut rng = Rng::new(11);
@@ -324,6 +349,7 @@ fn moe_strategies_agree_numerically() {
 // -------------------------------------------------------------------------
 #[test]
 fn hlo_adam_matches_rust_adam() {
+    require_artifacts!("hlo_adam_matches_rust_adam");
     let rt = Runtime::new(DIR).unwrap();
     let hlo = optimizer::HloAdam::new(&rt, 4096).unwrap();
     let n = 6000; // crosses a bucket boundary
@@ -349,6 +375,7 @@ fn hlo_adam_matches_rust_adam() {
 // -------------------------------------------------------------------------
 #[test]
 fn checkpoint_roundtrip_with_real_params() {
+    require_artifacts!("checkpoint_roundtrip_with_real_params");
     let rt = Runtime::new(DIR).unwrap();
     let params = rt.init_params("tiny_bla", 0).unwrap();
     let dir = std::env::temp_dir().join("lmoe_int_ckpt");
@@ -368,6 +395,7 @@ fn checkpoint_roundtrip_with_real_params() {
 // -------------------------------------------------------------------------
 #[test]
 fn packing_yields_more_real_tokens_and_finite_loss() {
+    require_artifacts!("packing_yields_more_real_tokens_and_finite_loss");
     let rt = Runtime::new(DIR).unwrap();
     let exe = rt.load("eval_loss_tiny_gla_b2n128").unwrap();
     let params = rt.init_params("tiny_gla", 0).unwrap();

@@ -11,8 +11,8 @@ use linear_moe::inference::Decoder;
 use linear_moe::rng::Rng;
 use linear_moe::serve::engine::run_one;
 use linear_moe::serve::{
-    poisson_trace, Arrival, Engine, EngineCfg, RefAttnDecoder, RefLsmDecoder,
-    Request, Sampling,
+    poisson_trace, Arrival, Engine, EngineCfg, Outcome, RefAttnDecoder,
+    RefLsmDecoder, Request, Sampling,
 };
 
 const VOCAB: usize = 64;
@@ -36,6 +36,7 @@ fn mixed_requests(n: usize, seed: u64) -> Vec<Request> {
                 eos: if id % 4 == 0 { Some(3) } else { None },
                 sampling,
                 seed: 1000 + id,
+                ttl: None,
             }
         })
         .collect()
@@ -67,9 +68,11 @@ where
 {
     let reqs = mixed_requests(n, 7);
     let trace = staggered(&reqs, 2.0, 21);
-    let mut engine = Engine::new(engine_dec, cfg);
+    let mut engine = Engine::new(engine_dec, cfg).expect("engine");
     let report = engine.run_trace(&trace).expect("engine trace");
     assert_eq!(report.results.len(), n, "every request must finish");
+    assert!(report.outcomes.all_finished(), "no deadlines or faults in play");
+    assert_eq!(report.outcomes.finished, n as u64);
     for r in &report.results {
         let mut solo = fresh();
         let want = run_one(&mut solo, &reqs[r.id as usize]).expect("single-stream");
@@ -78,9 +81,12 @@ where
             "request {} diverged from single-stream decode",
             r.id
         );
-        assert!(r.admit_tick >= r.arrival_tick);
-        assert!(r.first_token_tick >= r.admit_tick);
-        assert!(r.finish_tick >= r.first_token_tick);
+        assert_eq!(r.outcome, Outcome::Finished);
+        let admit = r.admit_tick.expect("finished request was admitted");
+        let first = r.first_token_tick.expect("finished request sampled");
+        assert!(admit >= r.arrival_tick);
+        assert!(first >= admit);
+        assert!(r.finish_tick >= first);
         assert!(!r.tokens.is_empty() && r.tokens.len() <= reqs[r.id as usize].max_new);
     }
     report
@@ -137,7 +143,7 @@ fn backpressure_bounces_then_serves_all() {
         .map(|r| Arrival { at_tick: 0, req: r.clone() })
         .collect();
     let cfg = EngineCfg { max_pending: 2, ..Default::default() };
-    let mut engine = Engine::new(lsm(4), cfg);
+    let mut engine = Engine::new(lsm(4), cfg).expect("engine");
     let report = engine.run_trace(&trace).expect("trace");
     assert!(report.rejected > 0, "depth-2 queue must bounce a burst of 24");
     assert_eq!(report.results.len(), 24, "bounced requests retry and finish");
@@ -154,7 +160,7 @@ fn engine_is_deterministic() {
         let reqs = mixed_requests(20, 3);
         let trace = staggered(&reqs, 1.5, 4);
         let cfg = EngineCfg { preempt_after: Some(2), ..Default::default() };
-        Engine::new(lsm(3), cfg).run_trace(&trace).unwrap()
+        Engine::new(lsm(3), cfg).unwrap().run_trace(&trace).unwrap()
     };
     let (a, b) = (run(), run());
     assert_eq!(a.results.len(), b.results.len());
@@ -180,6 +186,7 @@ fn state_arena_reuses_buffers_in_steady_state() {
             eos: None,
             sampling: Sampling::Greedy,
             seed: id,
+            ttl: None,
         })
         .collect();
     let trace: Vec<Arrival> = reqs
@@ -187,7 +194,7 @@ fn state_arena_reuses_buffers_in_steady_state() {
         .map(|r| Arrival { at_tick: 0, req: r.clone() })
         .collect();
     let cfg = EngineCfg { preempt_after: Some(1), ..Default::default() };
-    let mut engine = Engine::new(lsm(2), cfg);
+    let mut engine = Engine::new(lsm(2), cfg).expect("engine");
     let report = engine.run_trace(&trace).expect("trace");
     assert!(report.swaps > 50, "rotation must swap a lot ({})", report.swaps);
     assert!(

@@ -1,0 +1,334 @@
+//! Chaos suite for the serving engine: deterministic fault injection
+//! must never cost a *correct* token.
+//!
+//! The invariant under test strengthens `tests/serve.rs`: with step
+//! errors, lane-state bit-rot, stalls, deadlines, and preemption all in
+//! play, every request that `Finished` is still bitwise identical to its
+//! single-stream reference (`run_one`), every `Failed`/`Expired` request
+//! carries a strict *prefix* of that reference (never wrong tokens), and
+//! every `Shed` request carries nothing.  Corrupted lane-state images are
+//! always caught by the CRC check before they are decoded from, and the
+//! whole circus is bit-for-bit reproducible from its seeds.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use linear_moe::inference::{Decoder, LaneState};
+use linear_moe::rng::{self, Rng};
+use linear_moe::serve::{
+    poisson_trace, run_one, Arrival, Engine, EngineCfg, EngineError, FaultDecoder,
+    Outcome, RefAttnDecoder, RefLsmDecoder, Request, Sampling, ServeFaultPlan,
+    ServeReport,
+};
+use linear_moe::tensor::Tensor;
+
+const VOCAB: usize = 64;
+const MODEL_SEED: u64 = 99;
+
+fn lsm(lanes: usize) -> RefLsmDecoder {
+    RefLsmDecoder::new(lanes, VOCAB, 16, MODEL_SEED)
+}
+
+fn attn(lanes: usize) -> RefAttnDecoder {
+    RefAttnDecoder::new(lanes, VOCAB, 8, 8, MODEL_SEED)
+}
+
+fn req(id: u64, prompt: Vec<i32>, max_new: usize, ttl: Option<u64>) -> Request {
+    let sampling = match id % 3 {
+        0 => Sampling::Greedy,
+        1 => Sampling::Temperature { temp: 0.9 },
+        _ => Sampling::TopK { k: 5, temp: 1.1 },
+    };
+    Request { id, prompt, max_new, eos: None, sampling, seed: 1000 + id, ttl }
+}
+
+fn mixed(n: usize, seed: u64, ttl: impl Fn(u64) -> Option<u64>) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n as u64)
+        .map(|id| {
+            let plen = 1 + rng.below(6);
+            let prompt = (0..plen).map(|_| rng.below(VOCAB) as i32).collect();
+            req(id, prompt, 4 + rng.below(8), ttl(id))
+        })
+        .collect()
+}
+
+fn burst(reqs: &[Request]) -> Vec<Arrival> {
+    reqs.iter().map(|r| Arrival { at_tick: 0, req: r.clone() }).collect()
+}
+
+/// The chaos contract, checked for every result against a fresh 1-lane
+/// reference decoder.
+fn check_contract<D: Decoder, F: Fn() -> D>(report: &ServeReport, reqs: &[Request], fresh: F) {
+    for r in &report.results {
+        let mut solo = fresh();
+        let want = run_one(&mut solo, &reqs[r.id as usize]).expect("reference");
+        match r.outcome {
+            Outcome::Finished => assert_eq!(
+                r.tokens, want,
+                "finished request {} diverged from single-stream",
+                r.id
+            ),
+            Outcome::Expired | Outcome::Failed { .. } => {
+                assert!(
+                    want.starts_with(&r.tokens),
+                    "request {} ({:?}) emitted non-prefix tokens {:?} (want {:?})",
+                    r.id,
+                    r.outcome,
+                    r.tokens,
+                    want
+                );
+                assert!(r.tokens.len() < want.len(), "partial outcome with full stream");
+            }
+            Outcome::Shed => {
+                assert!(r.tokens.is_empty(), "shed request {} has tokens", r.id);
+                assert!(r.admit_tick.is_none(), "shed request {} held a lane", r.id);
+            }
+        }
+    }
+}
+
+/// Injected decode-step faults: victims recover by replay and finish
+/// bitwise; everyone else never notices.  Exercised on both backends and
+/// repeated to pin determinism under faults.
+fn step_faults_recover<D: Decoder, F: Fn(usize) -> D>(make: F, spec: &str, expect: u64) {
+    let run = || {
+        let plan = Arc::new(ServeFaultPlan::parse(spec).unwrap());
+        let reqs = mixed(24, 7, |_| None);
+        let cfg = EngineCfg { fault: plan.clone(), ..Default::default() };
+        let mut engine =
+            Engine::new(FaultDecoder::new(make(4), plan), cfg).expect("engine");
+        let report = engine.run_trace(&burst(&reqs)).expect("trace");
+        (report, reqs)
+    };
+    let (report, reqs) = run();
+    assert_eq!(report.faults_injected, expect, "all planned faults must fire");
+    assert_eq!(report.outcomes.finished, 24, "defaults give enough retries");
+    assert!(report.outcomes.recovered >= 1, "a victim must have replayed");
+    assert!(
+        report.results.iter().map(|r| r.retries as u64).sum::<u64>() >= 1,
+        "victims record their replays"
+    );
+    check_contract(&report, &reqs, || make(1));
+    // chaos is reproducible: identical plan + trace => identical run
+    let (again, _) = run();
+    for (x, y) in report.results.iter().zip(&again.results) {
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.outcome, y.outcome);
+        assert_eq!(x.retries, y.retries);
+    }
+    assert_eq!(report.ticks, again.ticks);
+}
+
+#[test]
+fn step_faults_recover_bitwise_lsm() {
+    step_faults_recover(lsm, "step_err:step=4,lane=1;step_err:step=9,lane=3", 2);
+}
+
+#[test]
+fn step_faults_recover_bitwise_attn() {
+    step_faults_recover(attn, "step_err:step=3,lane=0;step_err:step=7,lane=2", 2);
+}
+
+#[test]
+fn retry_budget_exhaustion_fails_with_prefix() {
+    // 1 lane, zero retries: the fault at attempt 1 retires request 0 as
+    // Failed with the one token it already sampled -- a prefix, kept for
+    // the postmortem.  The next request runs clean on the same lane.
+    let plan = Arc::new(ServeFaultPlan::parse("step_err:step=1,lane=0").unwrap());
+    let reqs = vec![
+        req(0, vec![5], 4, None),      // samples from attempt 0
+        req(1, vec![6, 7], 3, None),
+    ];
+    let cfg = EngineCfg { fault: plan.clone(), max_retries: 0, ..Default::default() };
+    let mut engine = Engine::new(FaultDecoder::new(lsm(1), plan), cfg).unwrap();
+    let report = engine.run_trace(&burst(&reqs)).unwrap();
+    assert_eq!(report.faults_injected, 1);
+    assert_eq!(report.outcomes.failed, 1);
+    assert_eq!(report.outcomes.finished, 1);
+    let failed = &report.results[0];
+    assert_eq!(failed.id, 0);
+    assert_eq!(failed.outcome, Outcome::Failed { retries: 0 });
+    assert_eq!(failed.tokens.len(), 1, "the pre-fault token survives");
+    check_contract(&report, &reqs, || lsm(1));
+    // goodput counts only the finished request's tokens
+    assert_eq!(report.tokens_out, report.results[1].tokens.len() as u64);
+}
+
+/// Lane-state bit-rot: the image is corrupted after CRC stamping; resume
+/// must detect it (never decode from garbage) and recover by replay.
+fn corruption_recovers<D: Decoder, F: Fn(usize) -> D>(make: F) {
+    let plan = Arc::new(ServeFaultPlan::parse("corrupt_state:req=2,byte=5").unwrap());
+    let reqs: Vec<Request> =
+        (0..4).map(|id| req(id, vec![5, 9], 12, None)).collect();
+    let cfg = EngineCfg {
+        preempt_after: Some(1),
+        fault: plan.clone(),
+        ..Default::default()
+    };
+    let mut engine = Engine::new(FaultDecoder::new(make(2), plan), cfg).unwrap();
+    let report = engine.run_trace(&burst(&reqs)).unwrap();
+    assert_eq!(report.corruptions_injected, 1, "rotation must preempt req 2");
+    assert_eq!(report.crc_failures, 1, "corrupt image must be caught at check-in");
+    assert_eq!(report.outcomes.finished, 4);
+    assert!(report.outcomes.recovered >= 1);
+    let victim = &report.results[2];
+    assert!(victim.retries >= 1, "victim must have replayed");
+    check_contract(&report, &reqs, || make(1));
+}
+
+#[test]
+fn corruption_detected_and_recovered_lsm() {
+    corruption_recovers(lsm);
+}
+
+#[test]
+fn corruption_detected_and_recovered_attn() {
+    corruption_recovers(attn);
+}
+
+#[test]
+fn stall_burns_ticks_and_deadlines_expire() {
+    // a 40-tick stall from attempt 2 holds both lanes past the 20-tick
+    // TTL: the engine expires the sessions (prefix tokens kept) instead
+    // of hanging
+    let plan = Arc::new(ServeFaultPlan::parse("stall:step=2,ticks=40").unwrap());
+    let reqs = vec![
+        req(0, vec![5, 9], 6, Some(20)),
+        req(1, vec![7, 3], 6, Some(20)),
+    ];
+    let cfg = EngineCfg { fault: plan.clone(), ..Default::default() };
+    let mut engine = Engine::new(FaultDecoder::new(lsm(2), plan), cfg).unwrap();
+    let report = engine.run_trace(&burst(&reqs)).unwrap();
+    assert!(report.stalled_ticks >= 1, "the stall must burn ticks");
+    assert_eq!(report.outcomes.expired, 2);
+    for r in &report.results {
+        assert_eq!(r.outcome, Outcome::Expired);
+        assert_eq!(r.deadline, Some(20));
+        assert!(r.finish_tick > 20, "expiry happens after the deadline passes");
+        assert!(r.deadline_miss().unwrap_or(0) >= 1);
+        assert_eq!(r.tokens.len(), 1, "one token sampled before the stall");
+    }
+    check_contract(&report, &reqs, || lsm(1));
+    assert_eq!(report.tokens_out, 0, "expired tokens are not goodput");
+}
+
+#[test]
+fn admission_sheds_hopeless_deadlines() {
+    // request 1 needs 8 lane steps but only has a 3-tick TTL: shed at the
+    // door with zero lane steps spent; the rest finish bitwise
+    let reqs = vec![
+        req(0, vec![5, 9], 6, Some(100)),
+        req(1, vec![2, 4], 7, Some(3)),
+        req(2, vec![8], 5, None),
+        req(3, vec![1, 6, 2], 4, Some(100)),
+    ];
+    let mut engine = Engine::new(lsm(2), EngineCfg::default()).unwrap();
+    let report = engine.run_trace(&burst(&reqs)).unwrap();
+    assert_eq!(report.outcomes.shed, 1);
+    assert_eq!(report.outcomes.finished, 3);
+    let shed = &report.results[1];
+    assert_eq!(shed.outcome, Outcome::Shed);
+    assert!(shed.tokens.is_empty() && shed.admit_tick.is_none());
+    assert!(shed.first_token_tick.is_none());
+    assert!(shed.deadline_miss().is_none(), "shedding beats missing");
+    check_contract(&report, &reqs, || lsm(1));
+}
+
+#[test]
+fn seeded_chaos_property() {
+    // randomized soak: seeded step-error storms + deadlines + preemption
+    // + a tight retry budget, on a 4-lane engine.  Whatever happens, the
+    // outcome contract holds and the run replays bit-for-bit.
+    rng::check("serve_chaos", 8, |rng| {
+        let seed = rng.next_u64();
+        let run = |seed: u64| {
+            let plan =
+                Arc::new(ServeFaultPlan::seeded_step_errors(seed, 300, 4, 0.08));
+            let reqs = mixed(16, seed ^ 0xFEED, |id| {
+                (id % 3 == 0).then_some(20 + 3 * id)
+            });
+            let mut arrival_rng = Rng::new(seed ^ 1);
+            let trace = poisson_trace(&mut arrival_rng, reqs.len(), 1.5, |id| {
+                reqs[id as usize].clone()
+            });
+            let cfg = EngineCfg {
+                preempt_after: Some(2),
+                max_retries: 1,
+                fault: plan.clone(),
+                ..Default::default()
+            };
+            let mut engine =
+                Engine::new(FaultDecoder::new(lsm(4), plan), cfg).unwrap();
+            (engine.run_trace(&trace).unwrap(), reqs)
+        };
+        let (a, reqs) = run(seed);
+        assert_eq!(a.outcomes.total(), 16, "every request lands in one bucket");
+        assert_eq!(a.results.len(), 16);
+        check_contract(&a, &reqs, || lsm(1));
+        let (b, _) = run(seed);
+        assert_eq!(a.ticks, b.ticks);
+        assert_eq!(a.outcomes, b.outcomes);
+        assert_eq!(a.faults_injected, b.faults_injected);
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.outcome, y.outcome);
+            assert_eq!(x.finish_tick, y.finish_tick);
+        }
+    });
+}
+
+/// A decoder that (like the scalar-pos PJRT attention path) cannot serve
+/// lanes at independent positions.
+struct AlignedOnly {
+    inner: RefLsmDecoder,
+}
+
+impl Decoder for AlignedOnly {
+    fn lanes(&self) -> usize {
+        self.inner.lanes()
+    }
+
+    fn decode_step(&mut self, tokens: &Tensor, pos: &[i32]) -> Result<Tensor> {
+        self.inner.decode_step(tokens, pos)
+    }
+
+    fn save_lane(&self, lane: usize, out: &mut LaneState) -> Result<()> {
+        self.inner.save_lane(lane, out)
+    }
+
+    fn load_lane(&mut self, lane: usize, src: &LaneState) -> Result<()> {
+        self.inner.load_lane(lane, src)
+    }
+
+    fn reset_lane(&mut self, lane: usize) -> Result<()> {
+        self.inner.reset_lane(lane)
+    }
+
+    fn lane_state_bytes(&self, pos: usize) -> usize {
+        self.inner.lane_state_bytes(pos)
+    }
+
+    fn aligned_lanes_only(&self) -> bool {
+        true
+    }
+}
+
+#[test]
+fn aligned_only_decoder_rejected_at_construction() {
+    // multi-lane ragged scheduling over an aligned-only decoder is a
+    // typed construction error, not a wrong-token surprise at runtime
+    let err = Engine::new(AlignedOnly { inner: lsm(4) }, EngineCfg::default())
+        .err()
+        .expect("4 ragged lanes must be rejected");
+    assert!(matches!(
+        err.downcast_ref::<EngineError>(),
+        Some(EngineError::AlignedLanesOnly { lanes: 4 })
+    ));
+    // a single lane is trivially aligned: allowed, and it still serves
+    let reqs = vec![req(0, vec![5], 3, None)];
+    let mut engine =
+        Engine::new(AlignedOnly { inner: lsm(1) }, EngineCfg::default()).unwrap();
+    let report = engine.run_trace(&burst(&reqs)).unwrap();
+    assert_eq!(report.outcomes.finished, 1);
+}
