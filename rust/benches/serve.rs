@@ -24,7 +24,7 @@ use std::sync::Arc;
 use linear_moe::bench_util::bench;
 use linear_moe::coordinator::metrics::{Summary, Table};
 use linear_moe::inference::{Decoder, LaneState};
-use linear_moe::json;
+use linear_moe::json::{self, Json};
 use linear_moe::rng::Rng;
 use linear_moe::serve::{
     poisson_trace, Engine, EngineCfg, FaultDecoder, RefAttnDecoder, RefLsmDecoder,
@@ -75,6 +75,11 @@ fn swap_cost<D: Decoder>(
         });
     }
     Ok(rows)
+}
+
+/// Key/value shorthand for the `Json::obj` rows below.
+fn kv(k: &str, v: impl Into<Json>) -> (String, Json) {
+    (k.to_string(), v.into())
 }
 
 fn serve_requests(n: usize) -> Vec<Request> {
@@ -170,10 +175,10 @@ fn main() -> anyhow::Result<()> {
     // --- Part 2: engine throughput on the same trace -------------------
     let n = if smoke { 16 } else { 64 };
     let reqs = serve_requests(n);
-    let mut engine_rows = Vec::new();
+    let mut engine_rows: Vec<Json> = Vec::new();
     let mut table = Table::new(&[
         "engine", "tok/s", "occupancy", "swaps", "swap MiB", "reallocs",
-        "p50 wait", "p95 ttft",
+        "p50 wait", "p95 ttft", "p99 ttft",
     ]);
     let runs: Vec<(&str, ServeReport)> = vec![
         ("lsm", run_engine(RefLsmDecoder::new(4, VOCAB, d, SEED), &reqs)?),
@@ -202,23 +207,24 @@ fn main() -> anyhow::Result<()> {
             rep.state_reallocs.to_string(),
             format!("{:.0}", w.p50),
             format!("{:.0}", t.p95),
+            format!("{:.0}", t.p99),
         ]);
-        engine_rows.push(format!(
-            "    {{\"backend\": \"{name}\", \"requests\": {n}, \"lanes\": 4, \
-             \"tokens_out\": {}, \"tokens_per_sec\": {:.2}, \
-             \"occupancy\": {:.4}, \"steps\": {}, \"swaps\": {}, \
-             \"swap_bytes\": {}, \"state_reallocs\": {}, \
-             \"queue_wait_p50_ticks\": {:.1}, \"ttft_p95_ticks\": {:.1}}}",
-            rep.tokens_out,
-            rep.tokens_per_sec(),
-            rep.occupancy(),
-            rep.steps,
-            rep.swaps,
-            rep.swap_bytes,
-            rep.state_reallocs,
-            w.p50,
-            t.p95,
-        ));
+        engine_rows.push(Json::obj([
+            kv("backend", *name),
+            kv("requests", n),
+            kv("lanes", 4u64),
+            kv("tokens_out", rep.tokens_out),
+            kv("tokens_per_sec", rep.tokens_per_sec()),
+            kv("occupancy", rep.occupancy()),
+            kv("steps", rep.steps),
+            kv("swaps", rep.swaps),
+            kv("swap_bytes", rep.swap_bytes),
+            kv("state_reallocs", rep.state_reallocs),
+            kv("queue_wait_p50_ticks", w.p50),
+            kv("ttft_min_ticks", t.min),
+            kv("ttft_p95_ticks", t.p95),
+            kv("ttft_p99_ticks", t.p99),
+        ]));
     }
     println!("\n=== Continuous-batching engine, {n} requests, 4 lanes ===");
     table.print();
@@ -239,7 +245,7 @@ fn main() -> anyhow::Result<()> {
     // their coordinates, so the 1% storm is a subset of the 5% one
     let rates = [0.0, 0.01, 0.05];
     let horizon = 2000; // covers every decode attempt either trace makes
-    let mut sweep_rows = Vec::new();
+    let mut sweep_rows: Vec<Json> = Vec::new();
     let mut table = Table::new(&[
         "fault rate", "injected", "finished", "failed", "recovered", "retries",
         "goodput tok/s",
@@ -272,18 +278,17 @@ fn main() -> anyhow::Result<()> {
             retries.to_string(),
             format!("{:.0}", rep.tokens_per_sec()),
         ]);
-        sweep_rows.push(format!(
-            "    {{\"rate\": {rate}, \"faults_injected\": {}, \"finished\": {}, \
-             \"failed\": {}, \"recovered\": {}, \"retries\": {retries}, \
-             \"steps\": {}, \"tokens_out\": {}, \"goodput_tok_s\": {:.2}}}",
-            rep.faults_injected,
-            o.finished,
-            o.failed,
-            o.recovered,
-            rep.steps,
-            rep.tokens_out,
-            rep.tokens_per_sec(),
-        ));
+        sweep_rows.push(Json::obj([
+            kv("rate", rate),
+            kv("faults_injected", rep.faults_injected),
+            kv("finished", o.finished),
+            kv("failed", o.failed),
+            kv("recovered", o.recovered),
+            kv("retries", retries),
+            kv("steps", rep.steps),
+            kv("tokens_out", rep.tokens_out),
+            kv("goodput_tok_s", rep.tokens_per_sec()),
+        ]));
     }
     println!("\n=== Fault-rate sweep, LSM engine, {n} requests, 4 lanes ===");
     table.print();
@@ -291,25 +296,27 @@ fn main() -> anyhow::Result<()> {
     // --- Emit + schema-check BENCH_serve.json --------------------------
     let out = std::env::var("BENCH_JSON_OUT")
         .unwrap_or_else(|_| "../BENCH_serve.json".to_string());
-    let swap_json: Vec<String> = swap_rows
+    let swap_json: Vec<Json> = swap_rows
         .iter()
         .map(|r| {
-            format!(
-                "    {{\"backend\": \"{}\", \"pos\": {}, \"state_bytes\": {}, \
-                 \"swap_us\": {:.4}}}",
-                r.backend, r.pos, r.state_bytes, r.swap_us
-            )
+            Json::obj([
+                kv("backend", r.backend),
+                kv("pos", r.pos),
+                kv("state_bytes", r.state_bytes),
+                kv("swap_us", r.swap_us),
+            ])
         })
         .collect();
-    let json_text = format!(
-        "{{\n  \"bench\": \"serve\",\n  \"smoke\": {smoke},\n  \
-         \"iters\": {iters},\n  \"d\": {d},\n  \"swap_cost\": [\n{}\n  ],\n  \
-         \"engine\": [\n{}\n  ],\n  \"fault_sweep\": [\n{}\n  ]\n}}\n",
-        swap_json.join(",\n"),
-        engine_rows.join(",\n"),
-        sweep_rows.join(",\n")
-    );
-    std::fs::write(&out, &json_text)?;
+    let doc = Json::obj([
+        kv("bench", "serve"),
+        kv("smoke", smoke),
+        kv("iters", iters),
+        kv("d", d),
+        ("swap_cost".to_string(), Json::Arr(swap_json)),
+        ("engine".to_string(), Json::Arr(engine_rows)),
+        ("fault_sweep".to_string(), Json::Arr(sweep_rows)),
+    ]);
+    std::fs::write(&out, doc.pretty())?;
     println!("wrote {out}");
 
     let parsed = json::parse(&std::fs::read_to_string(&out)?)?;
@@ -330,7 +337,9 @@ fn main() -> anyhow::Result<()> {
         row.usize_field("swaps")?;
         assert!(row.get("tokens_per_sec").and_then(|v| v.as_f64()).is_some());
         assert!(row.get("occupancy").and_then(|v| v.as_f64()).is_some());
+        assert!(row.get("ttft_min_ticks").and_then(|v| v.as_f64()).is_some());
         assert!(row.get("ttft_p95_ticks").and_then(|v| v.as_f64()).is_some());
+        assert!(row.get("ttft_p99_ticks").and_then(|v| v.as_f64()).is_some());
     }
     let sweep = parsed.get("fault_sweep").and_then(|v| v.as_arr()).expect("fault_sweep");
     assert_eq!(sweep.len(), rates.len());

@@ -27,6 +27,7 @@ use linear_moe::coordinator::moe_ep::{
     forward_ep, forward_tokens, DispatchArena, EpCfg, ExpertWeights, MoeGeom,
     MoeLayer, ReferenceExperts, Strategy,
 };
+use linear_moe::json::{self, Json};
 use linear_moe::rng::Rng;
 use linear_moe::runtime::Runtime;
 use linear_moe::tensor::Tensor;
@@ -254,7 +255,8 @@ fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&[
         "EP config", "time/iter ms", "overlap %", "launches", "a2a MiB", "speedup",
     ]);
-    let mut json_rows = Vec::new();
+    let kv = |k: &str, v: Json| (k.to_string(), v);
+    let mut json_rows: Vec<Json> = Vec::new();
     for world in [1usize, 2, 4] {
         let b = crafted_batch(&mut rng, &shape, world);
         // bit-identical reference over the concatenated batch
@@ -289,14 +291,17 @@ fn main() -> anyhow::Result<()> {
                 format!("{:.2}", run.a2a_bytes as f64 / (1024.0 * 1024.0)),
                 format!("{speedup:.2}x"),
             ]);
-            json_rows.push(format!(
-                "    {{\"ep\": {world}, \"mode\": \"{mode}\", \"rounds\": {}, \
-                 \"ms_per_iter\": {:.4}, \"overlap_frac\": {:.4}, \
-                 \"launches\": {}, \"a2a_bytes\": {}, \"a2a_ops\": {}, \
-                 \"speedup_vs_sequential\": {:.4}}}",
-                run.rounds, run.ms_per_iter, run.overlap_frac, run.launches,
-                run.a2a_bytes, run.a2a_ops, speedup
-            ));
+            json_rows.push(Json::obj([
+                kv("ep", Json::from(world)),
+                kv("mode", Json::from(mode)),
+                kv("rounds", Json::from(run.rounds)),
+                kv("ms_per_iter", Json::from(run.ms_per_iter)),
+                kv("overlap_frac", Json::from(run.overlap_frac)),
+                kv("launches", Json::from(run.launches)),
+                kv("a2a_bytes", Json::from(run.a2a_bytes)),
+                kv("a2a_ops", Json::from(run.a2a_ops)),
+                kv("speedup_vs_sequential", Json::from(speedup)),
+            ]));
             if overlap && world >= 2 {
                 assert!(
                     run.overlap_frac > 0.0,
@@ -322,14 +327,43 @@ fn main() -> anyhow::Result<()> {
 
     let out = std::env::var("BENCH_JSON_OUT")
         .unwrap_or_else(|_| "../BENCH_moe_ep.json".to_string());
-    let json = format!(
-        "{{\n  \"bench\": \"table4_moe_ep\",\n  \"smoke\": {smoke},\n  \
-         \"iters\": {iters},\n  \"shape\": {{\"d\": {}, \"f\": {}, \
-         \"n_experts\": {}, \"heavy\": {}, \"light\": {}}},\n  \"runs\": [\n{}\n  ]\n}}\n",
-        shape.d, shape.f, shape.n_experts, shape.heavy, shape.light,
-        json_rows.join(",\n")
-    );
-    std::fs::write(&out, json)?;
+    let n_runs = json_rows.len();
+    let doc = Json::obj([
+        kv("bench", Json::from("table4_moe_ep")),
+        kv("smoke", Json::from(smoke)),
+        kv("iters", Json::from(iters)),
+        kv(
+            "shape",
+            Json::obj([
+                kv("d", Json::from(shape.d)),
+                kv("f", Json::from(shape.f)),
+                kv("n_experts", Json::from(shape.n_experts)),
+                kv("heavy", Json::from(shape.heavy)),
+                kv("light", Json::from(shape.light)),
+            ]),
+        ),
+        kv("runs", Json::Arr(json_rows)),
+    ]);
+    std::fs::write(&out, doc.pretty())?;
     println!("wrote {out}");
+
+    // schema check: re-read what we just wrote through the parser
+    let parsed = json::parse(&std::fs::read_to_string(&out)?)?;
+    assert_eq!(parsed.str_field("bench")?, "table4_moe_ep");
+    assert_eq!(parsed.get("shape").and_then(|s| s.get("n_experts")).and_then(|v| v.as_usize()),
+               Some(shape.n_experts));
+    let runs = parsed.get("runs").and_then(|v| v.as_arr()).expect("runs array");
+    assert_eq!(runs.len(), n_runs);
+    for row in runs {
+        row.str_field("mode")?;
+        row.usize_field("ep")?;
+        row.usize_field("rounds")?;
+        row.usize_field("launches")?;
+        row.usize_field("a2a_bytes")?;
+        assert!(row.get("ms_per_iter").and_then(|v| v.as_f64()).is_some());
+        assert!(row.get("overlap_frac").and_then(|v| v.as_f64()).is_some());
+        assert!(row.get("speedup_vs_sequential").and_then(|v| v.as_f64()).is_some());
+    }
+    println!("schema check passed");
     Ok(())
 }

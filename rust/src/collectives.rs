@@ -39,7 +39,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::fault::{Fault, FaultPlan};
+use crate::json::Json;
 use crate::tensor::Tensor;
+use crate::trace::{TraceHandle, Track};
 
 /// Default collective deadline.  Generous for in-process transports; the
 /// CLI / tests lower it via [`CommCfg`].
@@ -358,16 +360,22 @@ impl<T> WinExchange<T> {
 // Process group.
 // ---------------------------------------------------------------------------
 
-/// Communicator configuration: collective deadline + fault-injection plan.
+/// Communicator configuration: collective deadline + fault-injection plan
+/// + optional trace sink (per-op spans land on the `("comm", rank)` track).
 #[derive(Clone)]
 pub struct CommCfg {
     pub timeout: Duration,
     pub faults: Arc<FaultPlan>,
+    pub tracer: TraceHandle,
 }
 
 impl Default for CommCfg {
     fn default() -> Self {
-        CommCfg { timeout: DEFAULT_COMM_TIMEOUT, faults: Arc::new(FaultPlan::none()) }
+        CommCfg {
+            timeout: DEFAULT_COMM_TIMEOUT,
+            faults: Arc::new(FaultPlan::none()),
+            tracer: TraceHandle::none(),
+        }
     }
 }
 
@@ -476,6 +484,7 @@ pub struct CommHandle {
     /// next chunked-a2a shard sequence number (per-rank; the SPMD program
     /// order guarantees all ranks assign identical sequences)
     a2a_seq: AtomicU64,
+    trace: TraceHandle,
 }
 
 /// Receipt for a posted all-to-all shard.  Redeem with
@@ -533,6 +542,7 @@ impl Comm {
                 faults: cfg.faults.clone(),
                 step: AtomicU64::new(0),
                 a2a_seq: AtomicU64::new(0),
+                trace: cfg.tracer.clone(),
             });
         }
         (Comm { world, shared }, handles)
@@ -602,6 +612,33 @@ impl CommHandle {
         self.step.load(Ordering::Relaxed) as usize
     }
 
+    /// The trace sink this communicator emits into (no-op unless the
+    /// group was built with `CommCfg::tracer`).  EP and worker loops use
+    /// it to put their own spans on the same timeline.
+    pub fn tracer(&self) -> &TraceHandle {
+        &self.trace
+    }
+
+    fn track(&self) -> Track {
+        Track::new("comm", self.rank as u64)
+    }
+
+    /// Timeout/poison annotation: one `comm.error` instant per failed op.
+    fn trace_err(&self, op: &'static str, e: &CommError) {
+        if self.trace.on() {
+            self.trace.instant(
+                self.track(),
+                "comm",
+                "comm.error",
+                self.cur_step() as u64,
+                vec![
+                    ("op".to_string(), Json::from(op)),
+                    ("err".to_string(), Json::from(format!("{e}"))),
+                ],
+            );
+        }
+    }
+
     /// Consult the fault plan on entry to a collective.  Delays sleep here;
     /// kills poison both boards (so peers fail fast with `PeerFailed`)
     /// and then panic, modelling a hard rank death.
@@ -609,10 +646,34 @@ impl CommHandle {
         match self.faults.take_collective(self.rank, self.cur_step()) {
             Some(Fault::DelayCollective { ms, .. }) => {
                 self.shared.injected_delays.fetch_add(1, Ordering::Relaxed);
+                if self.trace.on() {
+                    self.trace.instant(
+                        self.track(),
+                        "fault",
+                        "fault.delay",
+                        self.cur_step() as u64,
+                        vec![
+                            ("op".to_string(), Json::from(op)),
+                            ("ms".to_string(), Json::from(ms)),
+                        ],
+                    );
+                }
                 std::thread::sleep(Duration::from_millis(ms));
             }
             Some(Fault::KillRank { rank, step }) => {
                 self.shared.injected_kills.fetch_add(1, Ordering::Relaxed);
+                if self.trace.on() {
+                    self.trace.instant(
+                        self.track(),
+                        "fault",
+                        "fault.kill",
+                        step as u64,
+                        vec![
+                            ("op".to_string(), Json::from(op)),
+                            ("rank".to_string(), Json::from(rank)),
+                        ],
+                    );
+                }
                 self.shared.board.poison(rank);
                 self.shared.board_multi.poison(rank);
                 self.shared.win.poison(rank);
@@ -640,13 +701,28 @@ impl CommHandle {
         op: &'static str,
     ) -> Result<Vec<Arc<Tensor>>, CommError> {
         self.preflight(op);
-        self.shared
+        let t0 = Instant::now();
+        let res = self
+            .shared
             .board
             .exchange_deadline(self.rank, val, self.timeout, op)
             .map_err(|e| {
                 self.record_err(&e);
+                self.trace_err(op, &e);
                 e
-            })
+            });
+        if res.is_ok() && self.trace.on() {
+            self.trace.span_timed(
+                self.track(),
+                "comm",
+                &format!("comm.{op}"),
+                self.cur_step() as u64,
+                0,
+                t0.elapsed(),
+                Vec::new(),
+            );
+        }
+        res
     }
 
     pub fn barrier(&self) -> Result<(), CommError> {
@@ -723,6 +799,15 @@ impl CommHandle {
         self.preflight("ring_send");
         if self.faults.take_drop_ring(self.rank, self.cur_step()).is_some() {
             self.shared.dropped_ring.fetch_add(1, Ordering::Relaxed);
+            if self.trace.on() {
+                self.trace.instant(
+                    self.track(),
+                    "fault",
+                    "fault.drop_ring",
+                    self.cur_step() as u64,
+                    Vec::new(),
+                );
+            }
             return Ok(());
         }
         self.shared
@@ -749,6 +834,7 @@ impl CommHandle {
                     waited_ms: self.timeout.as_millis() as u64,
                 };
                 self.record_err(&e);
+                self.trace_err("ring_recv", &e);
                 self.shared.board.poison(self.rank);
                 self.shared.board_multi.poison(self.rank);
                 self.shared.win.poison(self.rank);
@@ -770,14 +856,27 @@ impl CommHandle {
             .fetch_add(bytes as u64, Ordering::Relaxed);
         self.shared.ops_a2a.fetch_add(1, Ordering::Relaxed);
         self.preflight("all_to_all");
+        let t0 = Instant::now();
         let all = self
             .shared
             .board_multi
             .exchange_deadline(self.rank, parts, self.timeout, "all_to_all")
             .map_err(|e| {
                 self.record_err(&e);
+                self.trace_err("all_to_all", &e);
                 e
             })?;
+        if self.trace.on() {
+            self.trace.span_timed(
+                self.track(),
+                "comm",
+                "comm.all_to_all",
+                self.cur_step() as u64,
+                0,
+                t0.elapsed(),
+                vec![("bytes".to_string(), Json::from(bytes))],
+            );
+        }
         Ok(all.iter().map(|v| v[self.rank].clone()).collect())
     }
 
@@ -803,8 +902,21 @@ impl CommHandle {
         let seq = self.a2a_seq.fetch_add(1, Ordering::Relaxed);
         self.shared.win.post(self.rank, seq, parts).map_err(|e| {
             self.record_err(&e);
+            self.trace_err("a2a_post", &e);
             e
         })?;
+        if self.trace.on() {
+            self.trace.instant(
+                self.track(),
+                "comm",
+                "a2a.post",
+                self.cur_step() as u64,
+                vec![
+                    ("seq".to_string(), Json::from(seq)),
+                    ("bytes".to_string(), Json::from(bytes)),
+                ],
+            );
+        }
         Ok(A2aTicket { seq })
     }
 
@@ -813,14 +925,29 @@ impl CommHandle {
     /// sent to us, in source-rank order.  A deadline poisons all boards so
     /// peers blocked anywhere fail fast.
     pub fn a2a_wait(&self, ticket: A2aTicket) -> Result<Vec<Tensor>> {
+        let t0 = Instant::now();
         let res = self
             .shared
             .win
             .wait(self.rank, ticket.seq, self.timeout, "a2a_wait");
         match res {
-            Ok(all) => Ok(all.iter().map(|v| v[self.rank].clone()).collect()),
+            Ok(all) => {
+                if self.trace.on() {
+                    self.trace.span_timed(
+                        self.track(),
+                        "comm",
+                        "a2a.wait",
+                        self.cur_step() as u64,
+                        0,
+                        t0.elapsed(),
+                        vec![("seq".to_string(), Json::from(ticket.seq))],
+                    );
+                }
+                Ok(all.iter().map(|v| v[self.rank].clone()).collect())
+            }
             Err(e) => {
                 self.record_err(&e);
+                self.trace_err("a2a_wait", &e);
                 if matches!(e, CommError::Timeout { .. }) {
                     self.shared.board.poison(self.rank);
                     self.shared.board_multi.poison(self.rank);
@@ -975,7 +1102,7 @@ mod tests {
     #[test]
     fn injected_delay_slows_but_completes() {
         let faults = Arc::new(FaultPlan::parse("delay:rank=0,step=0,ms=30").unwrap());
-        let cfg = CommCfg { timeout: Duration::from_secs(5), faults };
+        let cfg = CommCfg { timeout: Duration::from_secs(5), faults, ..Default::default() };
         let (comm, handles) = Comm::new_with(2, cfg);
         let t0 = Instant::now();
         let joins: Vec<_> = handles
@@ -992,7 +1119,7 @@ mod tests {
     #[test]
     fn injected_kill_panics_rank_and_fails_peers_fast() {
         let faults = Arc::new(FaultPlan::parse("kill:rank=1,step=0").unwrap());
-        let cfg = CommCfg { timeout: Duration::from_secs(30), faults };
+        let cfg = CommCfg { timeout: Duration::from_secs(30), faults, ..Default::default() };
         let (comm, handles) = Comm::new_with(2, cfg);
         let joins: Vec<_> = handles
             .into_iter()
@@ -1119,7 +1246,7 @@ mod tests {
     #[test]
     fn dropped_ring_message_times_out_receiver() {
         let faults = Arc::new(FaultPlan::parse("drop_ring:rank=0,step=0").unwrap());
-        let cfg = CommCfg { timeout: Duration::from_millis(50), faults };
+        let cfg = CommCfg { timeout: Duration::from_millis(50), faults, ..Default::default() };
         let (comm, mut handles) = Comm::new_with(2, cfg);
         let h1 = handles.remove(1);
         let h0 = handles.remove(0);

@@ -34,8 +34,10 @@ use crate::collectives::{Comm, CommCfg, CommFaultStats, CommHandle, CommTraffic}
 use crate::coordinator::optimizer::DistributedOptimizer;
 use crate::coordinator::{checkpoint, metrics};
 use crate::fault::FaultPlan;
+use crate::json::Json;
 use crate::runtime::Runtime;
 use crate::tensor::{Bundle, Tensor};
+use crate::trace::{TraceHandle, Track};
 
 pub struct DdpConfig {
     pub artifacts_dir: String,
@@ -258,6 +260,9 @@ pub struct ResilientCfg {
     pub backoff: Duration,
     pub ckpt_path: PathBuf,
     pub faults: Arc<FaultPlan>,
+    /// optional tracer: per-rank collective spans plus supervisor
+    /// restart/rollback instants land on the same timeline
+    pub trace: TraceHandle,
 }
 
 /// Full training state captured by a checkpoint: enough to make a
@@ -408,8 +413,13 @@ pub fn run_ddp_resilient(
     let mut resume: Option<ResumeState> = None;
     let mut attempt = 0usize;
     let t0 = Instant::now();
+    let sup_track = Track::new("supervisor", 0);
     loop {
-        let comm_cfg = CommCfg { timeout: cfg.comm_timeout, faults: cfg.faults.clone() };
+        let comm_cfg = CommCfg {
+            timeout: cfg.comm_timeout,
+            faults: cfg.faults.clone(),
+            tracer: cfg.trace.clone(),
+        };
         let (comm, handles) = Comm::new_with(cfg.dp, comm_cfg);
         let mut joins = Vec::new();
         for (rank, h) in handles.into_iter().enumerate() {
@@ -444,7 +454,7 @@ pub fn run_ddp_resilient(
                 let dt = t0.elapsed().as_secs_f64();
                 let (ag, rs, _, _) = comm.traffic();
                 let losses = loss_sink.lock().unwrap().clone();
-                return Ok(DdpReport {
+                let report = DdpReport {
                     losses,
                     params,
                     traffic: (ag, rs),
@@ -453,12 +463,30 @@ pub fn run_ddp_resilient(
                     recoveries,
                     fault_events: events,
                     health: Some(health.snapshot(comm_stats, traffic_kinds)),
-                });
+                };
+                if let Some(t) = cfg.trace.tracer() {
+                    if let Some(h) = &report.health {
+                        t.with_metrics(|m| crate::coordinator::obs::absorb_health(m, h));
+                    }
+                }
+                return Ok(report);
             }
             Some(rank) => {
                 attempt += 1;
                 let err = results.into_iter().nth(rank).unwrap().unwrap_err();
                 events.push(format!("attempt {attempt}: {err:#}"));
+                if cfg.trace.on() {
+                    cfg.trace.instant(
+                        sup_track.clone(),
+                        "fault",
+                        "attempt.failed",
+                        attempt as u64,
+                        vec![
+                            ("rank".to_string(), Json::from(rank as u64)),
+                            ("err".to_string(), Json::from(format!("{err:#}"))),
+                        ],
+                    );
+                }
                 if attempt > cfg.max_restarts {
                     return Err(err.context(format!(
                         "giving up after {} restarts (max_restarts)",
@@ -482,6 +510,21 @@ pub fn run_ddp_resilient(
                             r.start_step,
                             if used_prev { " (previous-good checkpoint)" } else { "" },
                         ));
+                        if cfg.trace.on() {
+                            cfg.trace.instant(
+                                sup_track.clone(),
+                                "fault",
+                                "recovery.rollback",
+                                r.start_step as u64,
+                                vec![
+                                    (
+                                        "recovery".to_string(),
+                                        Json::from((recoveries + 1) as u64),
+                                    ),
+                                    ("used_prev".to_string(), Json::from(used_prev)),
+                                ],
+                            );
+                        }
                         Some(r)
                     }
                     Err(_) => {
@@ -489,6 +532,18 @@ pub fn run_ddp_resilient(
                             "recovery {}: no usable checkpoint, restarting from step 0",
                             recoveries + 1
                         ));
+                        if cfg.trace.on() {
+                            cfg.trace.instant(
+                                sup_track.clone(),
+                                "fault",
+                                "recovery.restart_scratch",
+                                0,
+                                vec![(
+                                    "recovery".to_string(),
+                                    Json::from((recoveries + 1) as u64),
+                                )],
+                            );
+                        }
                         None
                     }
                 };

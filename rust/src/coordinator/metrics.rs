@@ -99,26 +99,36 @@ impl ServeOutcomes {
 /// (queue wait, TTFT, tokens) -- what the serve CLI and bench report.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
+    /// finite samples summarized (NaN/inf inputs are dropped, not counted)
     pub n: usize,
     pub mean: f64,
+    pub min: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
 impl Summary {
+    /// Order statistics over the *finite* entries of `xs`. Non-finite
+    /// samples are discarded rather than panicking (the old
+    /// `partial_cmp(..).unwrap()` aborted on any NaN) or poisoning the
+    /// percentiles; an all-NaN input yields the zero `Summary`.
     pub fn of(xs: &[f64]) -> Summary {
-        if xs.is_empty() {
+        let mut sorted: Vec<f64> = xs.iter().copied().filter(|v| v.is_finite()).collect();
+        if sorted.is_empty() {
             return Summary::default();
         }
-        let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let n = sorted.len();
+        let pct = |q: f64| sorted[(((n as f64) * q) as usize).min(n - 1)];
         Summary {
             n,
             mean: sorted.iter().sum::<f64>() / n as f64,
+            min: sorted[0],
             p50: sorted[n / 2],
-            p95: sorted[(((n as f64) * 0.95) as usize).min(n - 1)],
+            p95: pct(0.95),
+            p99: pct(0.99),
             max: sorted[n - 1],
         }
     }
@@ -301,10 +311,24 @@ mod tests {
         let s = Summary::of(&[4.0, 1.0, 3.0, 2.0, 100.0]);
         assert_eq!(s.n, 5);
         assert!((s.mean - 22.0).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
         assert_eq!(s.p50, 3.0);
         assert_eq!(s.p95, 100.0);
+        assert_eq!(s.p99, 100.0);
         assert_eq!(s.max, 100.0);
         assert_eq!(Summary::of(&[]).n, 0);
+    }
+
+    #[test]
+    fn summary_ignores_non_finite_samples() {
+        // Used to panic in partial_cmp(..).unwrap(); now NaN/inf are dropped.
+        let s = Summary::of(&[f64::NAN, 2.0, f64::INFINITY, 1.0, f64::NEG_INFINITY]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 2.0);
+        let all_bad = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!(all_bad.n, 0);
+        assert_eq!(all_bad.max, 0.0);
     }
 
     #[test]

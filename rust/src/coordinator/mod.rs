@@ -9,11 +9,14 @@
 //!  - [`moe_ep`]: expert-parallel token dispatch + MoE exec strategies
 //!  - [`checkpoint`]: parameter/optimizer-state save & load
 //!  - [`metrics`]: throughput / loss-curve recording
+//!  - [`obs`]: adapters folding the one-off stat structs into the
+//!    unified [`crate::trace`] registry + span-derived cross-checks
 
 pub mod checkpoint;
 pub mod ddp;
 pub mod metrics;
 pub mod moe_ep;
+pub mod obs;
 pub mod optimizer;
 pub mod pipeline;
 pub mod sp;

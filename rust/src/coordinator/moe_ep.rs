@@ -50,8 +50,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, ensure, Result};
 
 use crate::collectives::{A2aTicket, CommHandle};
+use crate::json::Json;
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::Tensor;
+use crate::trace::Track;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
@@ -954,6 +956,11 @@ pub fn forward_ep(
     };
 
     // dispatch / execute / return, per round
+    let trace = comm.tracer().clone();
+    let ep_track = Track::new("ep", comm.rank as u64);
+    // The per-round spans below carry the *same* measured durations that
+    // feed EpStats, so obs::span_overlap_frac re-derives overlap_frac
+    // from the trace and tests can cross-check the two.
     let mut returns: Vec<Vec<Tensor>> = Vec::with_capacity(rounds);
     if cfg.overlap {
         let mut data_tk: VecDeque<A2aTicket> = VecDeque::new();
@@ -961,60 +968,175 @@ pub fn forward_ep(
         let mut outstanding = 0usize;
         let (parts, bytes) = build_shard(0);
         stats.payload_bytes += bytes;
+        if trace.on() {
+            trace.instant(
+                ep_track.clone(),
+                "ep",
+                "ep.dispatch.post",
+                0,
+                vec![
+                    ("round".to_string(), Json::from(0u64)),
+                    ("bytes".to_string(), Json::from(bytes)),
+                ],
+            );
+        }
         data_tk.push_back(comm.a2a_post(parts)?);
         outstanding += 1;
         for c in 0..rounds {
             if c + 1 < rounds {
                 let (parts, bytes) = build_shard(c + 1);
                 stats.payload_bytes += bytes;
+                if trace.on() {
+                    trace.instant(
+                        ep_track.clone(),
+                        "ep",
+                        "ep.dispatch.post",
+                        (c + 1) as u64,
+                        vec![
+                            ("round".to_string(), Json::from(c + 1)),
+                            ("bytes".to_string(), Json::from(bytes)),
+                        ],
+                    );
+                }
                 data_tk.push_back(comm.a2a_post(parts)?);
                 outstanding += 1;
             }
             let tk = data_tk.pop_front().unwrap();
             let t0 = Instant::now();
             let recv = comm.a2a_wait(tk)?;
-            stats.comm_wait += t0.elapsed();
+            let wait_dt = t0.elapsed();
+            stats.comm_wait += wait_dt;
             outstanding -= 1;
+            if trace.on() {
+                trace.span_timed(
+                    ep_track.clone(),
+                    "ep",
+                    "ep.wait.data",
+                    c as u64,
+                    0,
+                    wait_dt,
+                    vec![("round".to_string(), Json::from(c))],
+                );
+            }
             let t0 = Instant::now();
             let rets = ep_exec_round(
                 backend, cfg, geom, comm.rank, epr, chunk, c, &recv, arena, &mut stats,
             )?;
             let dt = t0.elapsed();
             stats.compute += dt;
-            if outstanding > 0 {
+            let overlapped = outstanding > 0;
+            if overlapped {
                 stats.compute_overlapped += dt;
+            }
+            if trace.on() {
+                trace.span_timed(
+                    ep_track.clone(),
+                    "ep",
+                    "ep.expert",
+                    c as u64,
+                    0,
+                    dt,
+                    vec![
+                        ("round".to_string(), Json::from(c)),
+                        ("overlapped".to_string(), Json::from(overlapped)),
+                    ],
+                );
             }
             ret_tk.push(comm.a2a_post(rets)?);
             outstanding += 1;
         }
-        for tk in ret_tk {
+        for (c, tk) in ret_tk.into_iter().enumerate() {
             let t0 = Instant::now();
             returns.push(comm.a2a_wait(tk)?);
-            stats.comm_wait += t0.elapsed();
+            let wait_dt = t0.elapsed();
+            stats.comm_wait += wait_dt;
+            if trace.on() {
+                trace.span_timed(
+                    ep_track.clone(),
+                    "ep",
+                    "ep.wait.return",
+                    c as u64,
+                    0,
+                    wait_dt,
+                    vec![("round".to_string(), Json::from(c))],
+                );
+            }
         }
     } else {
         for c in 0..rounds {
             let (parts, bytes) = build_shard(c);
             stats.payload_bytes += bytes;
+            if trace.on() {
+                trace.instant(
+                    ep_track.clone(),
+                    "ep",
+                    "ep.dispatch.post",
+                    c as u64,
+                    vec![
+                        ("round".to_string(), Json::from(c)),
+                        ("bytes".to_string(), Json::from(bytes)),
+                    ],
+                );
+            }
             let tk = comm.a2a_post(parts)?;
             let t0 = Instant::now();
             let recv = comm.a2a_wait(tk)?;
-            stats.comm_wait += t0.elapsed();
+            let wait_dt = t0.elapsed();
+            stats.comm_wait += wait_dt;
+            if trace.on() {
+                trace.span_timed(
+                    ep_track.clone(),
+                    "ep",
+                    "ep.wait.data",
+                    c as u64,
+                    0,
+                    wait_dt,
+                    vec![("round".to_string(), Json::from(c))],
+                );
+            }
             let t0 = Instant::now();
             let rets = ep_exec_round(
                 backend, cfg, geom, comm.rank, epr, chunk, c, &recv, arena, &mut stats,
             )?;
-            stats.compute += t0.elapsed();
+            let dt = t0.elapsed();
+            stats.compute += dt;
+            if trace.on() {
+                trace.span_timed(
+                    ep_track.clone(),
+                    "ep",
+                    "ep.expert",
+                    c as u64,
+                    0,
+                    dt,
+                    vec![
+                        ("round".to_string(), Json::from(c)),
+                        ("overlapped".to_string(), Json::from(false)),
+                    ],
+                );
+            }
             let tk = comm.a2a_post(rets)?;
             let t0 = Instant::now();
             returns.push(comm.a2a_wait(tk)?);
-            stats.comm_wait += t0.elapsed();
+            let wait_dt = t0.elapsed();
+            stats.comm_wait += wait_dt;
+            if trace.on() {
+                trace.span_timed(
+                    ep_track.clone(),
+                    "ep",
+                    "ep.wait.return",
+                    c as u64,
+                    0,
+                    wait_dt,
+                    vec![("round".to_string(), Json::from(c))],
+                );
+            }
         }
     }
 
     // combine: dst asc, round asc, rows in sorted send order -- for every
     // token that is global expert-ascending accumulation, matching the
     // single-rank reference bit-for-bit
+    let t0 = Instant::now();
     let mut y = vec![0f32; t * d];
     for dst in 0..world {
         for (c, round_ret) in returns.iter().enumerate() {
@@ -1030,6 +1152,17 @@ pub fn forward_ep(
                 }
             }
         }
+    }
+    if trace.on() {
+        trace.span_timed(
+            ep_track,
+            "ep",
+            "ep.combine",
+            rounds as u64,
+            0,
+            t0.elapsed(),
+            vec![("rows".to_string(), Json::from(stats.sent_rows))],
+        );
     }
     Ok((Tensor::f32(&[t, d], y), stats))
 }

@@ -1,0 +1,214 @@
+//! Observability glue: adapters that fold the pre-existing one-off stat
+//! structs ([`CommTraffic`], [`CommFaultStats`], [`HealthSnapshot`],
+//! [`ServeOutcomes`], [`ServeReport`], [`EpStats`]) into the unified
+//! [`MetricsRegistry`], plus span-derived re-computations of the two
+//! headline ratios — serving occupancy and EP compute/comm overlap — so
+//! tests can assert that the trace and the hand-maintained counters
+//! agree.
+//!
+//! The adapters do not replace the source structs (tests and reports
+//! still use them directly); they give every number a stable registry
+//! name so one `metrics` JSON blob carries the whole story.
+
+use crate::collectives::{CommFaultStats, CommTraffic};
+use crate::coordinator::metrics::{HealthSnapshot, ServeOutcomes};
+use crate::coordinator::moe_ep::EpStats;
+use crate::json::Json;
+use crate::serve::ServeReport;
+use crate::trace::{Event, Kind, MetricsRegistry};
+
+pub fn absorb_traffic(m: &mut MetricsRegistry, t: &CommTraffic) {
+    m.inc("comm.all_gather.bytes", t.all_gather_bytes);
+    m.inc("comm.all_gather.ops", t.all_gather_ops);
+    m.inc("comm.reduce_scatter.bytes", t.reduce_scatter_bytes);
+    m.inc("comm.reduce_scatter.ops", t.reduce_scatter_ops);
+    m.inc("comm.ring.bytes", t.ring_bytes);
+    m.inc("comm.ring.ops", t.ring_ops);
+    m.inc("comm.all_to_all.bytes", t.all_to_all_bytes);
+    m.inc("comm.all_to_all.ops", t.all_to_all_ops);
+    m.inc("comm.total.bytes", t.total_bytes());
+}
+
+pub fn absorb_comm_faults(m: &mut MetricsRegistry, f: &CommFaultStats) {
+    m.inc("fault.timeouts", f.timeouts);
+    m.inc("fault.peer_failures", f.peer_failures);
+    m.inc("fault.injected_kills", f.injected_kills);
+    m.inc("fault.injected_delays", f.injected_delays);
+    m.inc("fault.dropped_ring", f.dropped_ring);
+}
+
+pub fn absorb_health(m: &mut MetricsRegistry, h: &HealthSnapshot) {
+    for (rank, beats) in h.heartbeats.iter().enumerate() {
+        m.inc(&format!("health.heartbeats.rank{rank}"), *beats);
+    }
+    m.inc("health.restarts", h.restarts);
+    absorb_comm_faults(m, &h.comm);
+    absorb_traffic(m, &h.traffic);
+}
+
+pub fn absorb_outcomes(m: &mut MetricsRegistry, o: &ServeOutcomes) {
+    m.inc("serve.outcome.finished", o.finished);
+    m.inc("serve.outcome.expired", o.expired);
+    m.inc("serve.outcome.shed", o.shed);
+    m.inc("serve.outcome.failed", o.failed);
+    m.inc("serve.outcome.recovered", o.recovered);
+}
+
+pub fn absorb_serve_report(m: &mut MetricsRegistry, r: &ServeReport) {
+    m.inc("serve.ticks", r.ticks);
+    m.inc("serve.steps", r.steps);
+    m.inc("serve.active_lane_steps", r.active_lane_steps);
+    m.inc("serve.tokens_out", r.tokens_out);
+    m.inc("serve.swaps", r.swaps);
+    m.inc("serve.swap_bytes", r.swap_bytes);
+    m.inc("serve.state_reallocs", r.state_reallocs);
+    m.inc("serve.rejected", r.rejected);
+    m.inc("serve.faults_injected", r.faults_injected);
+    m.inc("serve.stalled_ticks", r.stalled_ticks);
+    m.inc("serve.crc_failures", r.crc_failures);
+    m.inc("serve.corruptions_injected", r.corruptions_injected);
+    m.gauge("serve.occupancy", r.occupancy());
+    m.gauge("serve.tokens_per_sec", r.tokens_per_sec());
+    absorb_outcomes(m, &r.outcomes);
+}
+
+pub fn absorb_ep_stats(m: &mut MetricsRegistry, rank: usize, s: &EpStats) {
+    let p = format!("ep.rank{rank}");
+    m.inc(&format!("{p}.rounds"), s.rounds as u64);
+    m.inc(&format!("{p}.launches"), s.launches as u64);
+    m.inc(&format!("{p}.sent_rows"), s.sent_rows as u64);
+    m.inc(&format!("{p}.recv_rows"), s.recv_rows as u64);
+    m.inc(&format!("{p}.dropped_rows"), s.dropped_rows as u64);
+    m.inc(&format!("{p}.payload_bytes"), s.payload_bytes);
+    m.gauge(&format!("{p}.comm_wait_us"), s.comm_wait.as_secs_f64() * 1e6);
+    m.gauge(&format!("{p}.compute_us"), s.compute.as_secs_f64() * 1e6);
+    m.gauge(&format!("{p}.overlap_frac"), s.overlap_frac());
+}
+
+fn arg<'a>(ev: &'a Event, key: &str) -> Option<&'a Json> {
+    ev.args.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+}
+
+/// Serving occupancy re-derived from the trace: the mean of the
+/// `active` arg over all `engine.step` spans. `engine.step` is emitted
+/// once per decoder step that ran a batch, so this must equal
+/// [`ServeReport::occupancy`] *exactly* (both are ratios of the same
+/// integer tick-domain counters).
+pub fn span_occupancy(events: &[Event]) -> Option<f64> {
+    let mut steps = 0u64;
+    let mut active = 0u64;
+    for ev in events {
+        if ev.name == "engine.step" && matches!(ev.kind, Kind::Span { .. }) {
+            steps += 1;
+            active += arg(ev, "active")?.as_f64()? as u64;
+        }
+    }
+    if steps == 0 {
+        None
+    } else {
+        Some(active as f64 / steps as f64)
+    }
+}
+
+/// EP overlap fraction re-derived from the trace: wall time of
+/// `ep.expert` spans whose `overlapped` arg is true over the wall time
+/// of all `ep.expert` spans. Each span carries the same measured
+/// duration that `forward_ep` adds into `EpStats.compute`, so this
+/// agrees with [`EpStats::overlap_frac`] up to f64 summation order.
+pub fn span_overlap_frac(events: &[Event]) -> Option<f64> {
+    let mut total = 0.0f64;
+    let mut overlapped = 0.0f64;
+    let mut seen = false;
+    for ev in events {
+        if ev.name == "ep.expert" && matches!(ev.kind, Kind::Span { .. }) {
+            seen = true;
+            let dur = ev.wall_dur_us?;
+            total += dur;
+            if arg(ev, "overlapped") == Some(&Json::Bool(true)) {
+                overlapped += dur;
+            }
+        }
+    }
+    if !seen || total == 0.0 {
+        if seen {
+            return Some(0.0);
+        }
+        return None;
+    }
+    Some(overlapped / total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Track;
+
+    fn step(tick: u64, active: u64) -> Event {
+        Event {
+            track: Track::new("engine", 0),
+            cat: "serve",
+            name: "engine.step".to_string(),
+            tick,
+            kind: Kind::Span { dur_ticks: 1 },
+            args: vec![("active".to_string(), Json::from(active))],
+            wall_us: None,
+            wall_dur_us: None,
+        }
+    }
+
+    fn expert(round: u64, overlapped: bool, dur_us: f64) -> Event {
+        Event {
+            track: Track::new("ep", 0),
+            cat: "ep",
+            name: "ep.expert".to_string(),
+            tick: round,
+            kind: Kind::Span { dur_ticks: 0 },
+            args: vec![("overlapped".to_string(), Json::Bool(overlapped))],
+            wall_us: Some(0.0),
+            wall_dur_us: Some(dur_us),
+        }
+    }
+
+    #[test]
+    fn occupancy_from_spans() {
+        assert_eq!(span_occupancy(&[]), None);
+        let evs = vec![step(0, 4), step(1, 2), step(2, 3)];
+        assert_eq!(span_occupancy(&evs), Some(3.0));
+    }
+
+    #[test]
+    fn overlap_from_spans() {
+        assert_eq!(span_overlap_frac(&[]), None);
+        let evs = vec![
+            expert(0, false, 10.0),
+            expert(1, true, 20.0),
+            expert(2, true, 10.0),
+        ];
+        let f = span_overlap_frac(&evs).unwrap();
+        assert!((f - 0.75).abs() < 1e-12, "got {f}");
+        // all-zero durations: defined as 0.0, not NaN
+        assert_eq!(span_overlap_frac(&[expert(0, true, 0.0)]), Some(0.0));
+    }
+
+    #[test]
+    fn absorb_adapters_populate_registry() {
+        let mut m = MetricsRegistry::default();
+        let t = CommTraffic { all_gather_bytes: 8, all_gather_ops: 1, ..Default::default() };
+        absorb_traffic(&mut m, &t);
+        assert_eq!(m.counter("comm.all_gather.bytes"), 8);
+        assert_eq!(m.counter("comm.total.bytes"), 8);
+
+        let o = ServeOutcomes { finished: 3, shed: 1, ..Default::default() };
+        absorb_outcomes(&mut m, &o);
+        assert_eq!(m.counter("serve.outcome.finished"), 3);
+        assert_eq!(m.counter("serve.outcome.shed"), 1);
+
+        let s = EpStats { rounds: 2, payload_bytes: 64, ..Default::default() };
+        absorb_ep_stats(&mut m, 1, &s);
+        assert_eq!(m.counter("ep.rank1.rounds"), 2);
+        assert_eq!(m.counter("ep.rank1.payload_bytes"), 64);
+        assert_eq!(m.gauge_value("ep.rank1.overlap_frac"), Some(0.0));
+
+        crate::json::parse(&m.to_json().to_string()).expect("registry json parses");
+    }
+}

@@ -1,10 +1,17 @@
-//! Minimal JSON parser for the artifact manifest.
+//! Minimal JSON parser *and writer* for the artifact manifest, bench
+//! output, and the tracing exporters.
 //!
-//! The build environment is offline (no serde); this parser covers the
+//! The build environment is offline (no serde); the parser covers the
 //! JSON subset `aot.py` emits: objects, arrays, strings (with escapes),
-//! numbers, booleans, null.  ~200 lines, fully tested.
+//! numbers, booleans, null.  The writer is the mirror image: `Display`
+//! emits compact single-line JSON, [`Json::pretty`] the 2-space-indented
+//! form, and both round-trip through [`parse`] bit-exactly (objects are
+//! `BTreeMap`s, so key order -- and therefore the emitted bytes -- is
+//! deterministic).  Non-finite numbers have no JSON spelling and are
+//! written as `null`.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 use anyhow::{bail, Result};
 
@@ -70,6 +77,171 @@ impl Json {
         self.get(key)
             .and_then(|v| v.as_usize())
             .ok_or_else(|| anyhow::anyhow!("missing numeric field {key:?}"))
+    }
+
+    /// Build an object from key/value pairs (keys sort; last wins on dup).
+    pub fn obj(pairs: impl IntoIterator<Item = (String, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().collect())
+    }
+
+    /// Compact single-line serialization (same as `to_string()` via
+    /// `Display`, kept as a method for call-site clarity).
+    pub fn write(&self, out: &mut String) {
+        use fmt::Write as _;
+        let _ = write!(out, "{self}");
+    }
+
+    /// Pretty serialization: 2-space indent, one key per line -- the shape
+    /// the hand-rolled bench emitters used to produce.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, depth: usize) {
+        use fmt::Write as _;
+        let pad = |out: &mut String, d: usize| out.push_str(&"  ".repeat(d));
+        match self {
+            Json::Arr(items) if !items.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in items.iter().enumerate() {
+                    pad(out, depth + 1);
+                    v.pretty_into(out, depth + 1);
+                    out.push_str(if i + 1 < items.len() { ",\n" } else { "\n" });
+                }
+                pad(out, depth);
+                out.push(']');
+            }
+            Json::Obj(map) if !map.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in map.iter().enumerate() {
+                    pad(out, depth + 1);
+                    let _ = write!(out, "{}: ", Json::Str(k.clone()));
+                    v.pretty_into(out, depth + 1);
+                    out.push_str(if i + 1 < map.len() { ",\n" } else { "\n" });
+                }
+                pad(out, depth);
+                out.push('}');
+            }
+            other => {
+                let _ = write!(out, "{other}");
+            }
+        }
+    }
+}
+
+/// Write a number the parser reads back to the same `f64`.  Integral
+/// values in the exactly-representable range drop the fraction (`5`, not
+/// `5.0`); Rust's shortest-round-trip float formatting covers the rest.
+/// JSON has no NaN/inf, so non-finite values degrade to `null`.
+fn write_num(f: &mut fmt::Formatter<'_>, n: f64) -> fmt::Result {
+    if !n.is_finite() {
+        return write!(f, "null");
+    }
+    if n == n.trunc() && n.abs() < 9.0e15 {
+        write!(f, "{}", n as i64)
+    } else {
+        write!(f, "{n}")
+    }
+}
+
+fn write_str(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    write!(f, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\t' => write!(f, "\\t")?,
+            '\r' => write!(f, "\\r")?,
+            '\u{8}' => write!(f, "\\b")?,
+            '\u{c}' => write!(f, "\\f")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => write!(f, "null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => write_num(f, *n),
+            Json::Str(s) => write_str(f, s),
+            Json::Arr(items) => {
+                write!(f, "[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Json::Obj(map) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write_str(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+
+impl From<u32> for Json {
+    fn from(v: u32) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<i64> for Json {
+    fn from(v: i64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
     }
 }
 
@@ -281,5 +453,48 @@ mod tests {
         assert!(parse("{").is_err());
         assert!(parse("[1,]").is_err());
         assert!(parse("12 34").is_err());
+    }
+
+    #[test]
+    fn writer_round_trips() {
+        let v = Json::obj([
+            ("name".to_string(), Json::from("a\nb\t\"c\"\\")),
+            ("count".to_string(), Json::from(42u64)),
+            ("ratio".to_string(), Json::from(0.1 + 0.2)),
+            ("neg".to_string(), Json::from(-1.5e-3)),
+            ("flag".to_string(), Json::from(true)),
+            ("none".to_string(), Json::Null),
+            (
+                "items".to_string(),
+                Json::Arr(vec![Json::from(1u64), Json::from("x"), Json::Bool(false)]),
+            ),
+        ]);
+        let compact = v.to_string();
+        assert_eq!(parse(&compact).unwrap(), v, "compact round-trip");
+        let pretty = v.pretty();
+        assert_eq!(parse(&pretty).unwrap(), v, "pretty round-trip");
+        assert!(pretty.contains("  \"count\": 42"), "pretty indents: {pretty}");
+    }
+
+    #[test]
+    fn writer_is_deterministic_and_escapes_controls() {
+        let v = Json::obj([
+            ("b".to_string(), Json::from("\u{1}")),
+            ("a".to_string(), Json::from(5.0)),
+        ]);
+        // BTreeMap keys sort, integral floats drop the fraction
+        assert_eq!(v.to_string(), "{\"a\":5,\"b\":\"\\u0001\"}");
+        let back = parse(&v.to_string()).unwrap();
+        assert_eq!(back.get("b").unwrap().as_str(), Some("\u{1}"));
+    }
+
+    #[test]
+    fn writer_maps_non_finite_to_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        // large magnitudes keep full precision through the round-trip
+        let big = Json::Num(1.0e300);
+        let back = parse(&big.to_string()).unwrap();
+        assert_eq!(back.as_f64(), Some(1.0e300));
     }
 }

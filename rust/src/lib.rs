@@ -10,6 +10,7 @@
 //!        data pipeline, metrics, CLI.
 
 pub mod json;
+pub mod trace;
 pub mod rng;
 pub mod fault;
 pub mod tensor;

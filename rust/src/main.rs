@@ -11,7 +11,7 @@
 use std::collections::HashMap;
 
 use anyhow::{Context, Result};
-use linear_moe::collectives::Comm;
+use linear_moe::collectives::{Comm, CommCfg};
 use linear_moe::coordinator::ddp::{
     pjrt_model_factory, run_ddp_resilient, run_single, ResilientCfg,
 };
@@ -19,7 +19,8 @@ use linear_moe::coordinator::moe_ep::{
     forward_ep, DispatchArena, EpCfg, EpStats, ExpertWeights, MoeGeom,
     ReferenceExperts, Strategy,
 };
-use linear_moe::coordinator::{checkpoint, metrics};
+use linear_moe::coordinator::{checkpoint, metrics, obs};
+use linear_moe::trace::TraceHandle;
 use linear_moe::rng::Rng;
 use linear_moe::data;
 use linear_moe::fault::FaultPlan;
@@ -31,6 +32,24 @@ use linear_moe::serve::{
     Sampling, ServeFaultPlan,
 };
 use linear_moe::tensor::Tensor;
+
+/// Build a live tracer iff `--trace-out` was given (tracing off = zero
+/// cost on the hot paths: every emission site is gated on `on()`).
+fn trace_handle(f: &HashMap<String, String>) -> TraceHandle {
+    if f.contains_key("trace-out") { TraceHandle::active() } else { TraceHandle::none() }
+}
+
+/// Write the JSONL + Perfetto exports and print the event summary when a
+/// tracer is live and `--trace-out` named a path.
+fn finish_trace(trace: &TraceHandle, path: Option<&String>) -> Result<()> {
+    let (Some(t), Some(path)) = (trace.tracer(), path) else {
+        return Ok(());
+    };
+    let (jsonl, perfetto) = t.write_outputs(path)?;
+    print!("{}", t.summary());
+    println!("trace: wrote {jsonl} and {perfetto} (open the .json in ui.perfetto.dev)");
+    Ok(())
+}
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
@@ -79,12 +98,14 @@ fn main() -> Result<()> {
                  \x20       [--ep N] [--moe-strategy loop|grouped|megablocks] \
                  [--moe-chunk E] [--moe-overlap true|false]\n\
                  \x20       (--ep runs the expert-parallel MoE engine over N ranks)\n\
+                 \x20       [--trace-out t.json] -- write Perfetto + JSONL trace \
+                 (train dp>1, --ep, serve)\n\
                  infer:  --tag tiny_bla --batch 4 --len 64\n\
                  serve:  --tag tiny_bla --requests 32 --batch 4 --max-new 32 \
                  [--prompt-len 8] [--arrival-gap 2.0]\n\
                  \x20       [--temp T] [--top-k K] [--preempt-after Q] \
                  [--max-pending N] [--seed S] [--backend auto|ref|pjrt]\n\
-                 \x20       [--deadline TTL] [--retries N] \
+                 \x20       [--deadline TTL] [--retries N] [--trace-out t.json] \
                  [--fault 'step_err:step=30,lane=1;corrupt_state:req=3;\
                  stall:step=50,ticks=20']\n\
                  eval:   --tag tiny_gla --batch 2 --seq 128 [--batches 8]\n\
@@ -115,6 +136,7 @@ fn train(dir: &str, f: &HashMap<String, String>) -> Result<()> {
         ),
         None => std::sync::Arc::new(FaultPlan::none()),
     };
+    let trace = trace_handle(f);
 
     let rt = Runtime::new(dir)?;
     let vocab = rt.manifest.variant(&tag)?.config.vocab;
@@ -147,6 +169,7 @@ fn train(dir: &str, f: &HashMap<String, String>) -> Result<()> {
                 backoff: std::time::Duration::from_millis(50),
                 ckpt_path,
                 faults,
+                trace: trace.clone(),
             },
             pjrt_model_factory(dir, &tag, batch, seq),
             bf,
@@ -198,6 +221,10 @@ fn train(dir: &str, f: &HashMap<String, String>) -> Result<()> {
         checkpoint::save(path, &[("params", params)])?;
         println!("saved {path}");
     }
+    if trace.on() && dp <= 1 {
+        eprintln!("note: --trace-out instruments the dp>1 resilient path; trace is empty");
+    }
+    finish_trace(&trace, f.get("trace-out"))?;
     Ok(())
 }
 
@@ -229,8 +256,10 @@ fn moe_ep_demo(f: &HashMap<String, String>) -> Result<()> {
     let mut rng = Rng::new(42);
     let weights = ExpertWeights::random(&mut rng, n_experts, d, ff);
     let backend0 = ReferenceExperts::new(weights);
+    let trace = trace_handle(f);
 
-    let (comm, handles) = Comm::new(ep);
+    let (comm, handles) =
+        Comm::new_with(ep, CommCfg { tracer: trace.clone(), ..Default::default() });
     let t0 = std::time::Instant::now();
     let joins: Vec<_> = handles
         .into_iter()
@@ -296,6 +325,24 @@ fn moe_ep_demo(f: &HashMap<String, String>) -> Result<()> {
         (batch * seq * steps) as f64 / dt,
         t.all_to_all_bytes, t.all_to_all_ops
     );
+    if let Some(tr) = trace.tracer() {
+        tr.with_metrics(|m| {
+            for (rank, s) in per_rank.iter().enumerate() {
+                obs::absorb_ep_stats(m, rank, s);
+            }
+            obs::absorb_traffic(m, &t);
+        });
+        // cross-check: overlap fraction re-derived from ep.expert spans
+        // must agree with the hand-maintained EpStats counters
+        if let Some(span_frac) = obs::span_overlap_frac(&tr.sorted_events()) {
+            println!(
+                "trace cross-check: span overlap {:.0}% (EpStats rank0 {:.0}%)",
+                100.0 * span_frac,
+                100.0 * s0.overlap_frac()
+            );
+        }
+    }
+    finish_trace(&trace, f.get("trace-out"))?;
     Ok(())
 }
 
@@ -356,11 +403,13 @@ fn serve_cmd(dir: &str, f: &HashMap<String, String>) -> Result<()> {
     } else {
         Sampling::Greedy
     };
+    let trace = trace_handle(f);
     let cfg = EngineCfg {
         max_pending,
         preempt_after: (quantum > 0).then_some(quantum),
         max_retries,
         fault: plan.clone(),
+        trace,
         ..Default::default()
     };
     let ttl = (ttl > 0).then_some(ttl);
@@ -387,7 +436,7 @@ fn serve_cmd(dir: &str, f: &HashMap<String, String>) -> Result<()> {
             let dec = FaultDecoder::new(dec, plan);
             drive_serve(
                 dec, vocab, requests, prompt_len, max_new, gap, sampling, seed, ttl,
-                cfg, false,
+                cfg, false, f.get("trace-out"),
             )
         }
         None if backend == "pjrt" => anyhow::bail!("--backend pjrt needs artifacts"),
@@ -402,7 +451,7 @@ fn serve_cmd(dir: &str, f: &HashMap<String, String>) -> Result<()> {
             let dec = FaultDecoder::new(RefLsmDecoder::new(batch, 64, 16, seed), plan);
             drive_serve(
                 dec, 64, requests, prompt_len, max_new, gap, sampling, seed, ttl, cfg,
-                degraded,
+                degraded, f.get("trace-out"),
             )
         }
     }
@@ -421,7 +470,9 @@ fn drive_serve<D: Decoder>(
     ttl: Option<u64>,
     cfg: EngineCfg,
     degraded: bool,
+    trace_out: Option<&String>,
 ) -> Result<()> {
+    let trace = cfg.trace.clone();
     let mut rng = Rng::new(seed);
     let mut prompt_rng = Rng::new(seed ^ 0xABCD);
     let trace = poisson_trace(&mut rng, requests, gap, |id| Request {
@@ -506,17 +557,29 @@ fn drive_serve<D: Decoder>(
         report.rejected
     );
     println!(
-        "queue wait ticks: mean {:.1} p50 {:.0} p95 {:.0} max {:.0}",
-        wait.mean, wait.p50, wait.p95, wait.max
+        "queue wait ticks: mean {:.1} min {:.0} p50 {:.0} p95 {:.0} p99 {:.0} max {:.0}",
+        wait.mean, wait.min, wait.p50, wait.p95, wait.p99, wait.max
     );
     println!(
-        "ttft ticks:       mean {:.1} p50 {:.0} p95 {:.0} max {:.0}",
-        ttft.mean, ttft.p50, ttft.p95, ttft.max
+        "ttft ticks:       mean {:.1} min {:.0} p50 {:.0} p95 {:.0} p99 {:.0} max {:.0}",
+        ttft.mean, ttft.min, ttft.p50, ttft.p95, ttft.p99, ttft.max
     );
     println!(
         "per-lane state {} B (constant in position for LSM)",
         engine.dec.lane_state_bytes(prompt_len + max_new)
     );
+    if let Some(t) = trace.tracer() {
+        // cross-check: occupancy re-derived from engine.step spans is a
+        // ratio of the same integer counters as ServeReport::occupancy
+        if let Some(occ) = obs::span_occupancy(&t.sorted_events()) {
+            println!(
+                "trace cross-check: span occupancy {:.4} (report {:.4})",
+                occ,
+                report.occupancy()
+            );
+        }
+    }
+    finish_trace(&trace, trace_out)?;
     Ok(())
 }
 

@@ -41,7 +41,9 @@ use anyhow::Result;
 
 use crate::coordinator::metrics::ServeOutcomes;
 use crate::inference::Decoder;
+use crate::json::Json;
 use crate::tensor::Tensor;
+use crate::trace::{TraceHandle, Track};
 
 use super::fault::{corrupt_lane_state, lane_state_crc, ServeFault, ServeFaultError,
                    ServeFaultPlan};
@@ -118,6 +120,10 @@ pub struct EngineCfg {
     /// deterministic fault plan (empty = inject nothing); shared with the
     /// `FaultDecoder` wrapper when one is in play
     pub fault: Arc<ServeFaultPlan>,
+    /// trace sink for engine/request lifecycle spans (no-op by default).
+    /// The engine is single-threaded and emits logical-tick timestamps
+    /// only, so its whole trace is deterministic.
+    pub trace: TraceHandle,
 }
 
 impl Default for EngineCfg {
@@ -128,6 +134,7 @@ impl Default for EngineCfg {
             max_ticks: 10_000_000,
             max_retries: 2,
             fault: Arc::new(ServeFaultPlan::none()),
+            trace: TraceHandle::none(),
         }
     }
 }
@@ -282,18 +289,35 @@ impl<D: Decoder> Engine<D> {
         })
     }
 
+    fn req_track(id: u64) -> Track {
+        Track::new("req", id)
+    }
+
     /// Submit one request at the current tick; `Err` = backpressure.
     pub fn submit(&mut self, req: Request) -> Result<(), Request> {
         debug_assert!(!req.prompt.is_empty() && req.max_new >= 1);
         self.has_deadlines |= req.ttl.is_some();
-        self.queue
-            .submit(Session::new(req, self.tick))
-            .map_err(|s| s.req)
+        let id = req.id;
+        match self.queue.submit(Session::new(req, self.tick)) {
+            Ok(()) => {
+                if self.cfg.trace.on() {
+                    self.cfg.trace.instant(
+                        Self::req_track(id),
+                        "serve",
+                        "req.queued",
+                        self.tick,
+                        Vec::new(),
+                    );
+                }
+                Ok(())
+            }
+            Err(s) => Err(s.req),
+        }
     }
 
     /// Record a terminal outcome for a session (lane-held or not).
-    fn finish(&mut self, s: Session, outcome: Outcome) {
-        if let Some(st) = s.state {
+    fn finish(&mut self, mut s: Session, outcome: Outcome) {
+        if let Some(st) = s.state.take() {
             self.arena.put(st);
         }
         match outcome {
@@ -306,6 +330,34 @@ impl<D: Decoder> Engine<D> {
             Outcome::Expired => self.outcomes.expired += 1,
             Outcome::Shed => self.outcomes.shed += 1,
             Outcome::Failed { .. } => self.outcomes.failed += 1,
+        }
+        if self.cfg.trace.on() {
+            let outcome_str = match outcome {
+                Outcome::Finished => "finished",
+                Outcome::Expired => "expired",
+                Outcome::Shed => "shed",
+                Outcome::Failed { .. } => "failed",
+            };
+            let finish_tick = s.finish_tick.unwrap_or(self.tick);
+            let mut args = s.trace_args();
+            args.push(("outcome".to_string(), Json::from(outcome_str)));
+            // The whole queued -> finished lifetime as one span, so a
+            // request's story reads left-to-right on its own track.
+            self.cfg.trace.span(
+                Self::req_track(s.req.id),
+                "serve",
+                "req.lifecycle",
+                s.arrival_tick,
+                finish_tick.saturating_sub(s.arrival_tick),
+                args,
+            );
+            self.cfg.trace.instant(
+                Self::req_track(s.req.id),
+                "serve",
+                &format!("req.{outcome_str}"),
+                finish_tick,
+                Vec::new(),
+            );
         }
         self.results.push(RequestResult {
             id: s.req.id,
@@ -393,11 +445,32 @@ impl<D: Decoder> Engine<D> {
                 self.swaps += 1;
                 self.swap_bytes += st.size_bytes() as u64;
                 self.arena.put(st);
+                if self.cfg.trace.on() {
+                    self.cfg.trace.instant(
+                        Self::req_track(s.req.id),
+                        "serve",
+                        "req.resume",
+                        self.tick,
+                        vec![
+                            ("lane".to_string(), Json::from(lane)),
+                            ("crc_ok".to_string(), Json::from(true)),
+                        ],
+                    );
+                }
                 self.seat(lane, s);
                 return Ok(());
             }
             self.crc_failures += 1;
             self.arena.put(st);
+            if self.cfg.trace.on() {
+                self.cfg.trace.instant(
+                    Self::req_track(s.req.id),
+                    "fault",
+                    "req.crc_fail",
+                    self.tick,
+                    vec![("lane".to_string(), Json::from(lane))],
+                );
+            }
             if s.retries >= self.cfg.max_retries {
                 // budget spent: keep the partial stream (a prefix of the
                 // reference -- the corrupted image was never decoded from)
@@ -460,10 +533,28 @@ impl<D: Decoder> Engine<D> {
         {
             if corrupt_lane_state(&mut st, byte) {
                 self.corruptions_injected += 1;
+                if self.cfg.trace.on() {
+                    self.cfg.trace.instant(
+                        Self::req_track(s.req.id),
+                        "fault",
+                        "fault.corrupt_state",
+                        self.tick,
+                        vec![("byte".to_string(), Json::from(byte))],
+                    );
+                }
             }
         }
         s.state = Some(st);
         s.preemptions += 1;
+        if self.cfg.trace.on() {
+            self.cfg.trace.instant(
+                Self::req_track(s.req.id),
+                "serve",
+                "req.preempt",
+                self.tick,
+                vec![("lane".to_string(), Json::from(lane))],
+            );
+        }
         self.ready.push_back(s);
         Ok(())
     }
@@ -490,6 +581,19 @@ impl<D: Decoder> Engine<D> {
         self.steps += 1;
         self.active_lane_steps += active;
         let tick = self.tick;
+        if self.cfg.trace.on() {
+            // One span per decoder step that ran a batch; the `active`
+            // arg makes occupancy re-derivable from the trace alone
+            // (obs::span_occupancy == ServeReport::occupancy exactly).
+            self.cfg.trace.span(
+                Track::new("engine", 0),
+                "serve",
+                "engine.step",
+                tick,
+                1,
+                vec![("active".to_string(), Json::from(active))],
+            );
+        }
         for lane in 0..b {
             let Some(s) = self.lanes[lane].as_mut() else { continue };
             let done = s.absorb(&rows[lane * v..(lane + 1) * v], tick);
@@ -513,6 +617,15 @@ impl<D: Decoder> Engine<D> {
     /// step next tick, untouched.  The tick is burned either way.
     fn on_step_fault(&mut self, lane: usize) {
         self.faults_injected += 1;
+        if self.cfg.trace.on() {
+            self.cfg.trace.instant(
+                Track::new("engine", 0),
+                "fault",
+                "fault.step",
+                self.tick,
+                vec![("lane".to_string(), Json::from(lane))],
+            );
+        }
         if let Some(slot) = self.lanes.get_mut(lane) {
             if let Some(mut s) = slot.take() {
                 if let Some(st) = s.state.take() {
@@ -579,6 +692,15 @@ impl<D: Decoder> Engine<D> {
                     Some(&ServeFaultError::Step { lane }) => self.on_step_fault(lane),
                     Some(&ServeFaultError::Stall) => {
                         self.stalled_ticks += 1;
+                        if self.cfg.trace.on() {
+                            self.cfg.trace.instant(
+                                Track::new("engine", 0),
+                                "fault",
+                                "fault.stall",
+                                self.tick,
+                                Vec::new(),
+                            );
+                        }
                         self.tick += 1;
                     }
                     None => return Err(e),
@@ -593,7 +715,7 @@ impl<D: Decoder> Engine<D> {
             .sum();
         let mut results = std::mem::take(&mut self.results);
         results.sort_by_key(|r| r.id);
-        Ok(ServeReport {
+        let report = ServeReport {
             results,
             ticks: self.tick,
             steps: self.steps,
@@ -610,7 +732,11 @@ impl<D: Decoder> Engine<D> {
             crc_failures: self.crc_failures,
             corruptions_injected: self.corruptions_injected,
             degraded: false,
-        })
+        };
+        if let Some(t) = self.cfg.trace.tracer() {
+            t.with_metrics(|m| crate::coordinator::obs::absorb_serve_report(m, &report));
+        }
+        Ok(report)
     }
 }
 

@@ -23,6 +23,7 @@
 use anyhow::Result;
 
 use crate::inference::LaneState;
+use crate::json::Json;
 
 use super::engine::EngineError;
 use super::queue::Request;
@@ -117,6 +118,29 @@ impl Session {
         let prefill = self.req.prompt.len().saturating_sub(1 + self.pos as usize);
         let decode = self.req.max_new.saturating_sub(self.generated.len());
         (prefill + decode) as u64
+    }
+
+    /// Lifecycle facts for this session's `req.lifecycle` trace span --
+    /// all logical-tick / counter values, so the args are deterministic.
+    /// Optional ticks are emitted only when set (shed requests have no
+    /// admit tick, expired ones may have no first token).
+    pub fn trace_args(&self) -> Vec<(String, Json)> {
+        let mut args = vec![
+            ("id".to_string(), Json::from(self.req.id)),
+            ("tokens".to_string(), Json::from(self.generated.len())),
+            ("preemptions".to_string(), Json::from(self.preemptions as u64)),
+            ("retries".to_string(), Json::from(self.retries as u64)),
+        ];
+        if let Some(t) = self.admit_tick {
+            args.push(("admit_tick".to_string(), Json::from(t)));
+        }
+        if let Some(t) = self.first_token_tick {
+            args.push(("first_token_tick".to_string(), Json::from(t)));
+        }
+        if let Some(d) = self.deadline {
+            args.push(("deadline".to_string(), Json::from(d)));
+        }
+        args
     }
 
     /// Consume the logits row produced by feeding position `pos`: advance

@@ -1,0 +1,759 @@
+//! Unified tracing & metrics: spans, instants, counters, and exporters.
+//!
+//! Every event carries **dual timestamps**:
+//!
+//! * a deterministic `tick` in whatever logical clock the emitting
+//!   subsystem runs on (engine tick, training step, EP round), and
+//! * optional wall-clock fields (`wall_us` start, `wall_dur_us`
+//!   duration, microseconds since the tracer's epoch) for real latency.
+//!
+//! The tick-domain half of every export is bitwise-reproducible across
+//! reruns with the same seed; the wall fields are the documented
+//! nondeterministic exception and can be stripped (`include_wall =
+//! false`) to obtain a byte-stable artifact suitable for golden tests.
+//!
+//! Determinism model: events land in a single `Mutex<Vec<_>>`, so the
+//! *global* interleaving across threads is arbitrary, but each thread's
+//! own pushes keep program order. Exports stable-sort by [`Track`]
+//! (process name + lane), and every track in this codebase is written
+//! by exactly one thread at a time, so per-track event order — and
+//! therefore the sorted export — is deterministic.
+//!
+//! Two exporters share the [`crate::json`] writer:
+//!
+//! * **JSONL** — one compact JSON object per event, one per line.
+//! * **Chrome/Perfetto `trace_event` JSON** — load via
+//!   <https://ui.perfetto.dev> or `chrome://tracing`. Ticks are scaled
+//!   to 1 tick = 1000 "µs" so spans are visible at any zoom.
+//!
+//! A [`MetricsRegistry`] of named counters/gauges/histograms rides on
+//! the same tracer and unifies the scattered one-off stat structs
+//! (`CommTraffic`, `HealthBoard`, `ServeOutcomes`, ...) — see
+//! `coordinator::obs` for the adapters.
+
+use crate::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Where an event is drawn: a named process row and a lane (thread row)
+/// within it. Examples: `("engine", 0)`, `("comm", rank)`, `("req", id)`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Track {
+    pub process: String,
+    pub lane: u64,
+}
+
+impl Track {
+    pub fn new(process: &str, lane: u64) -> Self {
+        Track { process: process.to_string(), lane }
+    }
+}
+
+/// Event payload kind, mirroring the Chrome trace-event phases we emit:
+/// complete spans (`X`), instants (`i`), and counter samples (`C`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Kind {
+    /// An interval starting at `tick` lasting `dur_ticks` logical ticks
+    /// (0 means "within one tick"; wall duration may still be nonzero).
+    Span { dur_ticks: u64 },
+    /// A point-in-time marker.
+    Instant,
+    /// A sampled counter value (rendered as a counter track).
+    Counter { value: f64 },
+}
+
+/// One trace event. `args` hold deterministic key/values only; wall
+/// times live in the dedicated optional fields so they can be stripped.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub track: Track,
+    /// Category: "comm", "ep", "serve", "fault", "recovery", ...
+    pub cat: &'static str,
+    pub name: String,
+    /// Deterministic logical time (engine tick / training step / round).
+    pub tick: u64,
+    pub kind: Kind,
+    pub args: Vec<(String, Json)>,
+    /// Wall-clock start, µs since tracer epoch. Nondeterministic.
+    pub wall_us: Option<f64>,
+    /// Wall-clock duration in µs. Nondeterministic.
+    pub wall_dur_us: Option<f64>,
+}
+
+impl Event {
+    pub fn to_json(&self, include_wall: bool) -> Json {
+        let mut pairs: Vec<(String, Json)> = vec![
+            ("process".to_string(), Json::from(self.track.process.as_str())),
+            ("lane".to_string(), Json::from(self.track.lane)),
+            ("cat".to_string(), Json::from(self.cat)),
+            ("name".to_string(), Json::from(self.name.as_str())),
+            ("tick".to_string(), Json::from(self.tick)),
+        ];
+        match &self.kind {
+            Kind::Span { dur_ticks } => {
+                pairs.push(("kind".to_string(), Json::from("span")));
+                pairs.push(("dur_ticks".to_string(), Json::from(*dur_ticks)));
+            }
+            Kind::Instant => pairs.push(("kind".to_string(), Json::from("instant"))),
+            Kind::Counter { value } => {
+                pairs.push(("kind".to_string(), Json::from("counter")));
+                pairs.push(("value".to_string(), Json::from(*value)));
+            }
+        }
+        if !self.args.is_empty() {
+            pairs.push(("args".to_string(), Json::obj(self.args.iter().cloned())));
+        }
+        if include_wall {
+            if let Some(w) = self.wall_us {
+                pairs.push(("wall_us".to_string(), Json::from(w)));
+            }
+            if let Some(d) = self.wall_dur_us {
+                pairs.push(("wall_dur_us".to_string(), Json::from(d)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// A histogram that keeps raw samples (traces here are small: thousands
+/// of events, not millions) and rejects non-finite observations.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    rejected: u64,
+}
+
+impl Histogram {
+    /// Record one sample. Non-finite values are counted in
+    /// [`Histogram::rejected`] and return `false` instead of poisoning
+    /// every percentile downstream.
+    pub fn observe(&mut self, v: f64) -> bool {
+        if v.is_finite() {
+            self.samples.push(v);
+            true
+        } else {
+            self.rejected += 1;
+            false
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Nearest-rank percentile (same convention as `metrics::Summary`):
+    /// index `floor(n * q)` clamped to the last sample. `None` when
+    /// empty; with one sample every percentile is that sample.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(f64::total_cmp);
+        let n = sorted.len();
+        let idx = ((n as f64) * q.clamp(0.0, 1.0)) as usize;
+        Some(sorted[idx.min(n - 1)])
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        self.samples.iter().copied().min_by(f64::total_cmp)
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        self.samples.iter().copied().max_by(f64::total_cmp)
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.samples.iter().sum::<f64>() / self.samples.len() as f64)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::from).unwrap_or(Json::Null);
+        Json::obj([
+            ("n".to_string(), Json::from(self.n())),
+            ("rejected".to_string(), Json::from(self.rejected)),
+            ("min".to_string(), opt(self.min())),
+            ("mean".to_string(), opt(self.mean())),
+            ("p50".to_string(), opt(self.percentile(0.50))),
+            ("p95".to_string(), opt(self.percentile(0.95))),
+            ("p99".to_string(), opt(self.percentile(0.99))),
+            ("max".to_string(), opt(self.max())),
+        ])
+    }
+}
+
+/// Named counters, gauges, and histograms. All maps are `BTreeMap` so
+/// [`MetricsRegistry::to_json`] is deterministic.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record a histogram sample; returns `false` (and counts the
+    /// rejection) for non-finite values.
+    pub fn observe(&mut self, name: &str, v: f64) -> bool {
+        self.histograms.entry(name.to_string()).or_default().observe(v)
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = Json::obj(
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::from(*v))),
+        );
+        let gauges = Json::obj(
+            self.gauges.iter().map(|(k, v)| (k.clone(), Json::from(*v))),
+        );
+        let histograms = Json::obj(
+            self.histograms.iter().map(|(k, h)| (k.clone(), h.to_json())),
+        );
+        Json::obj([
+            ("counters".to_string(), counters),
+            ("gauges".to_string(), gauges),
+            ("histograms".to_string(), histograms),
+        ])
+    }
+}
+
+/// The shared trace buffer. Cheap to emit into (one short mutex hold
+/// per event); reading/exporting clones the buffer.
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    events: Mutex<Vec<Event>>,
+    metrics: Mutex<MetricsRegistry>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer {
+            epoch: Instant::now(),
+            events: Mutex::new(Vec::new()),
+            metrics: Mutex::new(MetricsRegistry::default()),
+        }
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Microseconds of wall clock since this tracer was created.
+    pub fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    pub fn emit(&self, ev: Event) {
+        self.events.lock().expect("trace buffer poisoned").push(ev);
+    }
+
+    /// Raw events in arrival order (nondeterministic across threads).
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().expect("trace buffer poisoned").clone()
+    }
+
+    /// Events stable-sorted by track. Each track is written by one
+    /// thread at a time, so this order is deterministic.
+    pub fn sorted_events(&self) -> Vec<Event> {
+        let mut evs = self.events();
+        evs.sort_by(|a, b| a.track.cmp(&b.track));
+        evs
+    }
+
+    pub fn with_metrics<R>(&self, f: impl FnOnce(&mut MetricsRegistry) -> R) -> R {
+        f(&mut self.metrics.lock().expect("metrics registry poisoned"))
+    }
+
+    pub fn metrics_snapshot(&self) -> MetricsRegistry {
+        self.metrics.lock().expect("metrics registry poisoned").clone()
+    }
+
+    /// One compact JSON object per line. With `include_wall = false`
+    /// the output is bitwise-deterministic for a fixed seed.
+    pub fn to_jsonl(&self, include_wall: bool) -> String {
+        let mut out = String::new();
+        for ev in self.sorted_events() {
+            ev.to_json(include_wall).write(&mut out);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome `trace_event` JSON (the "JSON Array Format" object with
+    /// `traceEvents`). Logical ticks are scaled ×1000 so that events
+    /// sharing a tick can be separated by a per-track sub-sequence
+    /// offset while preserving order.
+    pub fn to_perfetto(&self, include_wall: bool) -> String {
+        let evs = self.sorted_events();
+        // Stable process-name -> pid mapping (sorted, 1-based).
+        let mut pids: BTreeMap<&str, u64> = BTreeMap::new();
+        for ev in &evs {
+            let next = pids.len() as u64 + 1;
+            pids.entry(ev.track.process.as_str()).or_insert(next);
+        }
+        let mut trace_events: Vec<Json> = Vec::new();
+        let mut threads: BTreeMap<(u64, u64), String> = BTreeMap::new();
+        for ev in &evs {
+            let pid = pids[ev.track.process.as_str()];
+            threads
+                .entry((pid, ev.track.lane))
+                .or_insert_with(|| format!("{} {}", ev.track.process, ev.track.lane));
+        }
+        for (name, pid) in &pids {
+            trace_events.push(Json::obj([
+                ("ph".to_string(), Json::from("M")),
+                ("pid".to_string(), Json::from(*pid)),
+                ("name".to_string(), Json::from("process_name")),
+                (
+                    "args".to_string(),
+                    Json::obj([("name".to_string(), Json::from(*name))]),
+                ),
+            ]));
+        }
+        for ((pid, tid), label) in &threads {
+            trace_events.push(Json::obj([
+                ("ph".to_string(), Json::from("M")),
+                ("pid".to_string(), Json::from(*pid)),
+                ("tid".to_string(), Json::from(*tid)),
+                ("name".to_string(), Json::from("thread_name")),
+                (
+                    "args".to_string(),
+                    Json::obj([("name".to_string(), Json::from(label.as_str()))]),
+                ),
+            ]));
+        }
+        // Per-(track, tick) sub-sequence keeps same-tick events ordered.
+        let mut seq: BTreeMap<(u64, u64), (u64, u64)> = BTreeMap::new();
+        for ev in &evs {
+            let pid = pids[ev.track.process.as_str()];
+            let slot = seq.entry((pid, ev.track.lane)).or_insert((u64::MAX, 0));
+            if slot.0 == ev.tick {
+                slot.1 += 1;
+            } else {
+                *slot = (ev.tick, 0);
+            }
+            let ts = ev.tick * 1000 + slot.1;
+            let mut pairs: Vec<(String, Json)> = vec![
+                ("pid".to_string(), Json::from(pid)),
+                ("tid".to_string(), Json::from(ev.track.lane)),
+                ("cat".to_string(), Json::from(ev.cat)),
+                ("name".to_string(), Json::from(ev.name.as_str())),
+                ("ts".to_string(), Json::from(ts)),
+            ];
+            let mut args: Vec<(String, Json)> = ev.args.clone();
+            args.push(("tick".to_string(), Json::from(ev.tick)));
+            if include_wall {
+                if let Some(w) = ev.wall_us {
+                    args.push(("wall_us".to_string(), Json::from(w)));
+                }
+                if let Some(d) = ev.wall_dur_us {
+                    args.push(("wall_dur_us".to_string(), Json::from(d)));
+                }
+            }
+            match &ev.kind {
+                Kind::Span { dur_ticks } => {
+                    pairs.push(("ph".to_string(), Json::from("X")));
+                    pairs.push((
+                        "dur".to_string(),
+                        Json::from((dur_ticks * 1000).max(1)),
+                    ));
+                }
+                Kind::Instant => {
+                    pairs.push(("ph".to_string(), Json::from("i")));
+                    pairs.push(("s".to_string(), Json::from("t")));
+                }
+                Kind::Counter { value } => {
+                    pairs.push(("ph".to_string(), Json::from("C")));
+                    args.push(("value".to_string(), Json::from(*value)));
+                }
+            }
+            pairs.push(("args".to_string(), Json::obj(args)));
+            trace_events.push(Json::obj(pairs));
+        }
+        Json::obj([
+            ("displayTimeUnit".to_string(), Json::from("ms")),
+            ("traceEvents".to_string(), Json::Arr(trace_events)),
+        ])
+        .to_string()
+    }
+
+    /// Write both exports next to `path` and return
+    /// `(jsonl_path, perfetto_path)`. `*.jsonl` → event log at `path`,
+    /// Perfetto beside it as `*.perfetto.json`; `*.json` → Perfetto at
+    /// `path`, event log beside it as `*.jsonl`; any other path gets
+    /// both extensions appended.
+    pub fn write_outputs(&self, path: &str) -> Result<(String, String)> {
+        let (jsonl_path, perfetto_path) = if let Some(stem) = path.strip_suffix(".jsonl") {
+            (path.to_string(), format!("{stem}.perfetto.json"))
+        } else if let Some(stem) = path.strip_suffix(".json") {
+            (format!("{stem}.jsonl"), path.to_string())
+        } else {
+            (format!("{path}.jsonl"), format!("{path}.perfetto.json"))
+        };
+        std::fs::write(&jsonl_path, self.to_jsonl(true))
+            .with_context(|| format!("writing trace event log {jsonl_path}"))?;
+        std::fs::write(&perfetto_path, self.to_perfetto(true))
+            .with_context(|| format!("writing perfetto trace {perfetto_path}"))?;
+        Ok((jsonl_path, perfetto_path))
+    }
+
+    /// Human-readable digest: event counts per category and the
+    /// metrics registry, deterministic line order.
+    pub fn summary(&self) -> String {
+        let evs = self.sorted_events();
+        let mut by_cat: BTreeMap<&str, usize> = BTreeMap::new();
+        let mut tracks: BTreeMap<&Track, usize> = BTreeMap::new();
+        for ev in &evs {
+            *by_cat.entry(ev.cat).or_insert(0) += 1;
+            *tracks.entry(&ev.track).or_insert(0) += 1;
+        }
+        let mut out = format!(
+            "trace: {} events on {} tracks\n",
+            evs.len(),
+            tracks.len()
+        );
+        for (cat, n) in &by_cat {
+            out.push_str(&format!("  cat {cat:<10} {n} events\n"));
+        }
+        let metrics = self.metrics_snapshot();
+        if !metrics.is_empty() {
+            out.push_str("  metrics: ");
+            metrics.to_json().write(&mut out);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Cloneable, optional handle threaded through configs. `Default` /
+/// [`TraceHandle::none`] is a no-op sink: every emit is one branch.
+#[derive(Debug, Clone, Default)]
+pub struct TraceHandle(Option<Arc<Tracer>>);
+
+impl TraceHandle {
+    pub fn none() -> Self {
+        TraceHandle(None)
+    }
+
+    pub fn active() -> Self {
+        TraceHandle(Some(Arc::new(Tracer::new())))
+    }
+
+    pub fn on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.0.as_ref()
+    }
+
+    pub fn emit(&self, ev: Event) {
+        if let Some(t) = &self.0 {
+            t.emit(ev);
+        }
+    }
+
+    /// Tick-domain span with no wall timing.
+    pub fn span(
+        &self,
+        track: Track,
+        cat: &'static str,
+        name: &str,
+        tick: u64,
+        dur_ticks: u64,
+        args: Vec<(String, Json)>,
+    ) {
+        if let Some(t) = &self.0 {
+            t.emit(Event {
+                track,
+                cat,
+                name: name.to_string(),
+                tick,
+                kind: Kind::Span { dur_ticks },
+                args,
+                wall_us: None,
+                wall_dur_us: None,
+            });
+        }
+    }
+
+    /// Span with a measured wall duration that just ended (wall start
+    /// is back-dated by `wall_dur` from now).
+    pub fn span_timed(
+        &self,
+        track: Track,
+        cat: &'static str,
+        name: &str,
+        tick: u64,
+        dur_ticks: u64,
+        wall_dur: Duration,
+        args: Vec<(String, Json)>,
+    ) {
+        if let Some(t) = &self.0 {
+            let dur_us = wall_dur.as_secs_f64() * 1e6;
+            t.emit(Event {
+                track,
+                cat,
+                name: name.to_string(),
+                tick,
+                kind: Kind::Span { dur_ticks },
+                args,
+                wall_us: Some((t.now_us() - dur_us).max(0.0)),
+                wall_dur_us: Some(dur_us),
+            });
+        }
+    }
+
+    pub fn instant(
+        &self,
+        track: Track,
+        cat: &'static str,
+        name: &str,
+        tick: u64,
+        args: Vec<(String, Json)>,
+    ) {
+        if let Some(t) = &self.0 {
+            let now = t.now_us();
+            t.emit(Event {
+                track,
+                cat,
+                name: name.to_string(),
+                tick,
+                kind: Kind::Instant,
+                args,
+                wall_us: Some(now),
+                wall_dur_us: None,
+            });
+        }
+    }
+
+    pub fn counter(
+        &self,
+        track: Track,
+        cat: &'static str,
+        name: &str,
+        tick: u64,
+        value: f64,
+    ) {
+        if let Some(t) = &self.0 {
+            t.emit(Event {
+                track,
+                cat,
+                name: name.to_string(),
+                tick,
+                kind: Kind::Counter { value },
+                args: Vec::new(),
+                wall_us: None,
+                wall_dur_us: None,
+            });
+        }
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        if let Some(t) = &self.0 {
+            t.with_metrics(|m| m.inc(name, by));
+        }
+    }
+
+    pub fn gauge(&self, name: &str, v: f64) {
+        if let Some(t) = &self.0 {
+            t.with_metrics(|m| m.gauge(name, v));
+        }
+    }
+
+    pub fn observe(&self, name: &str, v: f64) -> bool {
+        match &self.0 {
+            Some(t) => t.with_metrics(|m| m.observe(name, v)),
+            None => false,
+        }
+    }
+}
+
+/// Shorthand for building deterministic `args` lists:
+/// `targs![("rank", rank), ("bytes", n)]` — values go through
+/// `Json::from`.
+#[macro_export]
+macro_rules! targs {
+    ($(($k:expr, $v:expr)),* $(,)?) => {
+        vec![$(($k.to_string(), $crate::json::Json::from($v))),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    fn ev(process: &str, lane: u64, name: &str, tick: u64) -> Event {
+        Event {
+            track: Track::new(process, lane),
+            cat: "test",
+            name: name.to_string(),
+            tick,
+            kind: Kind::Instant,
+            args: Vec::new(),
+            wall_us: Some(123.456),
+            wall_dur_us: None,
+        }
+    }
+
+    #[test]
+    fn jsonl_strips_wall_fields_and_sorts_by_track() {
+        let t = Tracer::new();
+        t.emit(ev("b", 0, "second", 5));
+        t.emit(ev("a", 1, "first", 9));
+        let out = t.to_jsonl(false);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"first\""), "track sort: {out}");
+        assert!(!out.contains("wall_us"), "wall stripped: {out}");
+        let with_wall = t.to_jsonl(true);
+        assert!(with_wall.contains("wall_us"));
+        for line in with_wall.lines() {
+            json::parse(line).expect("each jsonl line parses");
+        }
+    }
+
+    #[test]
+    fn per_track_order_is_preserved_under_stable_sort() {
+        let t = Tracer::new();
+        // Interleave two tracks; per-track order must survive sorting.
+        t.emit(ev("x", 0, "x0", 1));
+        t.emit(ev("y", 0, "y0", 7));
+        t.emit(ev("x", 0, "x1", 1));
+        t.emit(ev("y", 0, "y1", 2)); // ticks non-monotonic: order still kept
+        let names: Vec<String> = t.sorted_events().into_iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["x0", "x1", "y0", "y1"]);
+    }
+
+    #[test]
+    fn perfetto_parses_and_contains_metadata_and_spans() {
+        let t = Tracer::new();
+        t.emit(Event {
+            track: Track::new("engine", 0),
+            cat: "serve",
+            name: "engine.step".to_string(),
+            tick: 3,
+            kind: Kind::Span { dur_ticks: 1 },
+            args: vec![("active".to_string(), Json::from(2u64))],
+            wall_us: None,
+            wall_dur_us: None,
+        });
+        t.emit(ev("engine", 0, "mark", 3));
+        let doc = json::parse(&t.to_perfetto(true)).expect("perfetto parses");
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        // 1 process_name + 1 thread_name + 2 events
+        assert_eq!(evs.len(), 4);
+        let phases: Vec<&str> = evs.iter().filter_map(|e| {
+            e.get("ph").and_then(Json::as_str)
+        }).collect();
+        assert_eq!(phases, vec!["M", "M", "X", "i"]);
+        let span = &evs[2];
+        assert_eq!(span.get("ts").and_then(Json::as_f64), Some(3000.0));
+        assert_eq!(span.get("dur").and_then(Json::as_f64), Some(1000.0));
+        // Same tick, later in track order -> sub-sequence offset.
+        assert_eq!(evs[3].get("ts").and_then(Json::as_f64), Some(3001.0));
+    }
+
+    #[test]
+    fn histogram_edge_cases() {
+        let mut h = Histogram::default();
+        assert_eq!(h.percentile(0.5), None, "empty histogram");
+        assert_eq!(h.min(), None);
+        assert!(h.observe(7.0));
+        assert_eq!(h.percentile(0.0), Some(7.0), "n=1: every percentile");
+        assert_eq!(h.percentile(0.99), Some(7.0));
+        assert!(!h.observe(f64::NAN), "NaN rejected");
+        assert!(!h.observe(f64::INFINITY), "inf rejected");
+        assert_eq!(h.rejected(), 2);
+        assert_eq!(h.n(), 1, "rejected samples not stored");
+        // Even n: nearest-rank convention, idx = floor(n*q).
+        let mut h = Histogram::default();
+        for v in [4.0, 1.0, 3.0, 2.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.percentile(0.50), Some(3.0));
+        assert_eq!(h.percentile(0.99), Some(4.0));
+        assert_eq!(h.min(), Some(1.0));
+        assert_eq!(h.max(), Some(4.0));
+        assert_eq!(h.mean(), Some(2.5));
+    }
+
+    #[test]
+    fn registry_roundtrip_and_no_op_handle() {
+        let h = TraceHandle::active();
+        h.inc("comm.bytes", 10);
+        h.inc("comm.bytes", 5);
+        h.gauge("occupancy", 0.75);
+        assert!(h.observe("lat", 3.0));
+        assert!(!h.observe("lat", f64::NAN));
+        let t = h.tracer().unwrap();
+        let m = t.metrics_snapshot();
+        assert_eq!(m.counter("comm.bytes"), 15);
+        assert_eq!(m.gauge_value("occupancy"), Some(0.75));
+        assert_eq!(m.histogram("lat").unwrap().n(), 1);
+        json::parse(&m.to_json().to_string()).expect("metrics json parses");
+
+        let off = TraceHandle::none();
+        assert!(!off.on());
+        off.inc("x", 1);
+        off.span(Track::new("p", 0), "c", "n", 0, 0, Vec::new());
+        assert!(!off.observe("x", 1.0), "no-op handle records nothing");
+    }
+
+    #[test]
+    fn write_outputs_extension_rules() {
+        let t = Tracer::new();
+        t.emit(ev("p", 0, "n", 0));
+        let dir = std::env::temp_dir().join("linear_moe_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("t.jsonl");
+        let (j, p) = t.write_outputs(base.to_str().unwrap()).unwrap();
+        assert!(j.ends_with("t.jsonl"));
+        assert!(p.ends_with("t.perfetto.json"));
+        let jl = std::fs::read_to_string(&j).unwrap();
+        json::parse(jl.lines().next().unwrap()).unwrap();
+        json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        let base2 = dir.join("t2.json");
+        let (j2, p2) = t.write_outputs(base2.to_str().unwrap()).unwrap();
+        assert!(j2.ends_with("t2.jsonl"));
+        assert!(p2.ends_with("t2.json"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

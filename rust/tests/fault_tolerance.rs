@@ -90,6 +90,7 @@ fn cfg(
         backoff: Duration::from_millis(1),
         ckpt_path,
         faults: Arc::new(faults),
+        trace: Default::default(),
     }
 }
 
